@@ -1,0 +1,86 @@
+"""Paper Fig. 12 analogue: molecular-docking screening skeleton under Legio.
+
+The paper's second application screens a ligand database against a target,
+keeping the best-scoring molecules — EP with an all-reduce(max) at the end.
+Here each "docking score" is a deterministic surrogate (a seeded optimization
+of a rough energy function); the run uses the real model zoo only for sizing
+realism, not chemistry. Measured: throughput per configuration and the
+result-set integrity under faults (DROP loses the dead node's ligands,
+REBALANCE preserves the full screen — both valid per the paper's policies).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_repeated
+from repro.core import FaultInjector, LegioExecutor, LegioPolicy, VirtualCluster
+
+LIGANDS_PER_SHARD = 64
+POSES_PER_LIGAND = 128
+SIZES = [8, 16, 32]
+
+
+def dock_shard(node: int, shard: int, step: int) -> np.ndarray:
+    """Score one ligand shard; returns [best_score, best_ligand_id, count]."""
+    rng = np.random.default_rng(shard * 7919 + step)
+    # surrogate energy: min over random poses of a quadratic + LJ-ish term
+    best, best_id = np.inf, -1
+    for lig in range(LIGANDS_PER_SHARD):
+        poses = rng.normal(size=(POSES_PER_LIGAND, 3))
+        r2 = np.sum(poses ** 2, axis=1) + 0.5
+        energy = (r2 - 2.0) ** 2 - 1.0 / r2 ** 3 + 0.01 * lig
+        e = energy.min()
+        if e < best:
+            best, best_id = e, shard * LIGANDS_PER_SHARD + lig
+    return np.array([best, float(best_id), LIGANDS_PER_SHARD])
+
+
+def reduce_best(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    keep = a if a[0] <= b[0] else b
+    return np.array([keep[0], keep[1], a[2] + b[2]])
+
+
+def run_config(n: int, fail: bool, policy: str) -> tuple[float, dict]:
+    inj = FaultInjector.at([(1, 2)]) if fail else FaultInjector()
+    cl = VirtualCluster(
+        n, policy=LegioPolicy(batch_policy=policy, straggler_threshold=0.0),
+        injector=inj)
+    ex = LegioExecutor(cl, dock_shard, reduce_op=reduce_best)
+    secs = time_repeated(lambda: ex.run_step(), repeats=2, warmup=1)
+    last = ex.run_step()
+    _, _, screened = last.reduced
+    return secs, {"screened": int(screened), "survivors": len(cl.live_nodes)}
+
+
+def run() -> list[dict]:
+    rows = []
+    for n in SIZES:
+        t_plain, s_plain = run_config(n, fail=False, policy="drop")
+        t_drop, s_drop = run_config(n, fail=True, policy="drop")
+        t_reb, s_reb = run_config(n, fail=True, policy="rebalance")
+        rows.append({
+            "ranks": n,
+            "step_ms": t_plain * 1e3,
+            "step_ms_faulted": t_drop * 1e3,
+            "ligands_nofault": s_plain["screened"],
+            "ligands_drop": s_drop["screened"],
+            "ligands_rebalance": s_reb["screened"],
+            "survivors": s_drop["survivors"],
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, "fig12: docking screen under Legio")
+    for r in rows:
+        full = r["ranks"] * LIGANDS_PER_SHARD
+        assert r["ligands_nofault"] == full
+        assert r["ligands_drop"] == full - LIGANDS_PER_SHARD  # dead node's slice lost
+        assert r["ligands_rebalance"] == full                 # recovered
+    print("# DROP loses exactly the dead node's ligands; REBALANCE screens "
+          "the full database (counter-based shards are regenerable)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 5/6 analogue: Bcast/Reduce time vs message size, three stacks.
+
+The paper ran mpiBench on 32 ranks and compared (a) plain ULFM, (b) Legio
+flat, (c) Legio hierarchical. Here the three stacks are (a) the raw
+alpha-beta tree over the flat communicator, (b) flat + the per-call BNP
+agreement (Legio's per-op overhead), (c) the hierarchical schedule + the
+agreement bounded to the local_comm. The claim under test: the Legio curves
+track the baseline's growth — the overhead does not damage message-size
+scalability.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.collectives import (
+    HierarchicalCollectives,
+    LinkModel,
+    agreement_time,
+    flat_collective_time,
+)
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import LegioPolicy, optimal_k_linear
+
+N_RANKS = 32
+SIZES = [2 ** p for p in range(4, 23, 2)]       # 16 B .. 4 MiB
+
+
+def run() -> list[dict]:
+    link = LinkModel()
+    nodes = list(range(N_RANKS))
+    k = optimal_k_linear(N_RANKS)
+    topo = LegionTopology.build(nodes, k)
+    hier = HierarchicalCollectives(topo, link)
+    flat_topo = LegionTopology.flat(nodes)
+    flat = HierarchicalCollectives(flat_topo, link)
+
+    rows = []
+    for op in ("bcast", "reduce"):
+        for nbytes in SIZES:
+            payload = np.zeros(max(nbytes // 8, 1), np.float64)
+            contributions = {n: payload for n in nodes}
+            base = flat_collective_time(link, "one_to_all", N_RANKS, nbytes)
+            if op == "bcast":
+                t_flat = flat.bcast(0, payload).sim_seconds
+                t_hier = hier.bcast(0, payload).sim_seconds
+            else:
+                t_flat = flat.reduce(0, contributions).sim_seconds
+                t_hier = hier.reduce(0, contributions).sim_seconds
+            # Legio adds the BNP agreement per call (paper §IV)
+            t_flat += agreement_time(link, N_RANKS)
+            t_hier += agreement_time(link, k)
+            rows.append({
+                "op": op, "bytes": nbytes,
+                "ulfm_us": base * 1e6,
+                "legio_flat_us": t_flat * 1e6,
+                "legio_hier_us": t_hier * 1e6,
+                "flat_overhead_pct": 100 * (t_flat - base) / base,
+                "hier_overhead_pct": 100 * (t_hier - base) / base,
+            })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, "fig5/6: collective time vs message size (32 ranks)")
+    # scalability check: overheads flatten as message size grows
+    big = [r for r in rows if r["bytes"] >= 2 ** 20]
+    worst = max(abs(r["hier_overhead_pct"]) for r in big)
+    print(f"# max |hierarchical overhead| at >=1MiB: {worst:.1f}% "
+          f"({'OK: scalability preserved' if worst < 60 else 'REGRESSION'})")
+
+
+if __name__ == "__main__":
+    main()

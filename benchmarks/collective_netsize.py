@@ -1,0 +1,76 @@
+"""Paper Fig. 7/8/9 analogue: Bcast/Reduce/Barrier overhead vs network size.
+
+The ad-hoc paper benchmark times each call with and without Legio while the
+rank count grows. Reported per op and size: the baseline tree time, Legio
+flat, Legio hierarchical (k from Eq. 3), each accumulated over 100
+repetitions as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.collectives import (
+    HierarchicalCollectives,
+    LinkModel,
+    agreement_time,
+    flat_collective_time,
+)
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import optimal_k_linear
+
+REPS = 100
+PAYLOAD = 4096          # bytes, mid-size message
+NET_SIZES = [8, 16, 32, 64, 128, 256, 512]
+
+
+def run() -> list[dict]:
+    link = LinkModel()
+    rows = []
+    for n in NET_SIZES:
+        nodes = list(range(n))
+        k = optimal_k_linear(n)
+        hier = HierarchicalCollectives(LegionTopology.build(nodes, k), link)
+        flat = HierarchicalCollectives(LegionTopology.flat(nodes), link)
+        payload = np.zeros(PAYLOAD // 8, np.float64)
+        contributions = {i: payload for i in nodes}
+
+        for op in ("bcast", "reduce", "barrier"):
+            if op == "bcast":
+                t_f = flat.bcast(0, payload).sim_seconds
+                t_h = hier.bcast(0, payload).sim_seconds
+                base = flat_collective_time(link, "one_to_all", n, PAYLOAD)
+            elif op == "reduce":
+                t_f = flat.reduce(0, contributions).sim_seconds
+                t_h = hier.reduce(0, contributions).sim_seconds
+                base = flat_collective_time(link, "all_to_one", n, PAYLOAD)
+            else:
+                t_f = flat.barrier().sim_seconds
+                t_h = hier.barrier().sim_seconds
+                base = flat_collective_time(link, "all_to_all", n, 8)
+            t_f += agreement_time(link, n)
+            t_h += agreement_time(link, k)
+            rows.append({
+                "op": op, "ranks": n, "k_eq3": k,
+                "ulfm_100x_ms": base * REPS * 1e3,
+                "legio_flat_100x_ms": t_f * REPS * 1e3,
+                "legio_hier_100x_ms": t_h * REPS * 1e3,
+            })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, f"fig7/8/9: per-op overhead vs network size ({REPS} reps)")
+    # the hierarchical curve must grow no faster than the baseline
+    for op in ("bcast", "reduce", "barrier"):
+        sel = [r for r in rows if r["op"] == op]
+        growth_h = sel[-1]["legio_hier_100x_ms"] / sel[0]["legio_hier_100x_ms"]
+        growth_b = sel[-1]["ulfm_100x_ms"] / sel[0]["ulfm_100x_ms"]
+        verdict = "OK" if growth_h <= growth_b * 1.5 else "REGRESSION"
+        print(f"# {op}: growth 8->512 ranks: baseline {growth_b:.2f}x, "
+              f"hierarchical {growth_h:.2f}x [{verdict}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: CSV emit + timing helpers."""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from contextlib import contextmanager
+
+
+def emit(rows: list[dict], header: str = "") -> str:
+    """Print rows as CSV to stdout; returns the CSV text."""
+    if not rows:
+        print("(no rows)")
+        return ""
+    buf = io.StringIO()
+    writer = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    writer.writeheader()
+    for r in rows:
+        writer.writerow({k: _fmt(v) for k, v in r.items()})
+    text = buf.getvalue()
+    if header:
+        print(f"# {header}")
+    sys.stdout.write(text)
+    sys.stdout.flush()
+    return text
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return v
+
+
+def time_repeated(fn, repeats: int, *, warmup: int = 1) -> float:
+    """Mean wall seconds per call over ``repeats`` (after warmup)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+@contextmanager
+def section(name: str):
+    print(f"\n=== {name} ===")
+    t0 = time.perf_counter()
+    yield
+    print(f"=== {name} done in {time.perf_counter() - t0:.1f}s ===")

@@ -1,0 +1,71 @@
+"""Paper Fig. 10 analogue: communicator repair time vs #processes.
+
+Two quantities per cluster size:
+  * model cost — the calibrated S(x) sum for flat vs hierarchical repair
+    (worker- and master-failure cases, plus the 1/k-weighted expectation);
+  * measured wall — our runtime's actual repair path (topology surgery +
+    plan construction) on the virtual cluster, averaged over every node as
+    the victim.
+
+The paper's observation that the average hierarchical repair is cheaper on
+256 ranks "since the probability for a master node to fail is contained
+(1/8)" is exactly the expectation row here.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import LegioPolicy, optimal_k_linear
+from repro.core.shrink import ShrinkCostModel, ShrinkEngine
+
+SIZES = [16, 32, 64, 128, 256, 512]
+
+
+def measure_wall(n: int, k: int | None) -> float:
+    """Mean wall seconds of the repair path over all single-node victims."""
+    eng = ShrinkEngine(LegioPolicy())
+    total = 0.0
+    victims = list(range(n))
+    for victim in victims:
+        topo = (LegionTopology.build(list(range(n)), k) if k
+                else LegionTopology.flat(list(range(n))))
+        t0 = time.perf_counter()
+        eng.repair(topo, {victim})
+        total += time.perf_counter() - t0
+    return total / len(victims)
+
+
+def run() -> list[dict]:
+    eng = ShrinkEngine(LegioPolicy(), ShrinkCostModel(p=1.0))
+    rows = []
+    for n in SIZES:
+        k = optimal_k_linear(n)
+        rows.append({
+            "ranks": n,
+            "k_eq3": k,
+            "flat_model_s": eng.cost_flat(n),
+            "hier_worker_model_s": eng.cost_hierarchical(n, k, False),
+            "hier_master_model_s": eng.cost_hierarchical(n, k, True),
+            "hier_expected_model_s": eng.expected_repair_cost(n, k),
+            "flat_wall_us": measure_wall(n, None) * 1e6,
+            "hier_wall_us": measure_wall(n, k) * 1e6,
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, "fig10: repair time vs #processes")
+    r256 = next(r for r in rows if r["ranks"] == 256)
+    assert r256["hier_expected_model_s"] < r256["flat_model_s"], \
+        "hierarchical expected repair must beat flat at 256 ranks (paper)"
+    print(f"# 256 ranks: expected hierarchical repair "
+          f"{r256['hier_expected_model_s']:.3f}s vs flat "
+          f"{r256['flat_model_s']:.3f}s "
+          f"(paper: hierarchical wins on average, master prob 1/k)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+per (arch × shape × mesh): the three roofline terms, the dominant bound,
+MODEL_FLOPS/HLO_FLOPs, and bytes-per-device vs the v5e HBM.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DEFAULT_DIR = Path("experiments/dryrun")
+
+
+def load(dirpath: Path) -> list[dict]:
+    rows = []
+    for path in sorted(dirpath.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("skipped"):
+            continue
+        terms = rec["roofline"]
+        mem = rec["memory_analysis"]
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": "pod2" if rec["multi_pod"] else "pod1",
+            "compute_ms": terms["compute_s"] * 1e3,
+            "memory_ms": terms["memory_s"] * 1e3,
+            "collective_ms": terms["collective_s"] * 1e3,
+            "dominant": terms["dominant"].replace("_s", ""),
+            "roofline_frac": terms["roofline_fraction"],
+            "useful_flops_ratio": rec["useful_flops_ratio"],
+            "peak_GiB_per_dev": mem["peak_bytes_per_device"] / 2 ** 30,
+            "fits_v5e_16G": mem["peak_bytes_per_device"] < 16e9,
+            "tag": rec.get("overrides", {}) and "tuned" or "base",
+        })
+    return rows
+
+
+def main() -> None:
+    dirpath = Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT_DIR
+    rows = load(dirpath)
+    if not rows:
+        print(f"# no dry-run artifacts in {dirpath} — run "
+              f"`python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    emit(rows, f"roofline terms per (arch x shape x mesh) from {dirpath}")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    fits = sum(r["fits_v5e_16G"] for r in rows)
+    print(f"# dominant-term census: {doms}; {fits}/{len(rows)} cells fit 16G HBM")
+
+
+if __name__ == "__main__":
+    main()

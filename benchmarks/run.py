@@ -1,0 +1,44 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import section
+
+SUITES = [
+    # (key, module, paper anchor)
+    ("fig5_6_msgsize", "benchmarks.collective_msgsize", "Fig. 5/6"),
+    ("fig7_8_9_netsize", "benchmarks.collective_netsize", "Fig. 7/8/9"),
+    ("fig10_repair", "benchmarks.repair_time", "Fig. 10"),
+    ("fig11_nas_ep", "benchmarks.app_ep", "Fig. 11"),
+    ("fig12_docking", "benchmarks.app_docking", "Fig. 12"),
+    ("eq3_4_optimal_k", "benchmarks.optimal_k", "Eq. 3/4"),
+    ("repair_recompile", "benchmarks.repair_recompile", "beyond-paper"),
+    ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
+]
+
+
+def main() -> int:
+    filters = [a.lower() for a in sys.argv[1:]]
+    failures = []
+    for key, module, anchor in SUITES:
+        if filters and not any(f in key for f in filters):
+            continue
+        with section(f"{key} ({anchor})"):
+            try:
+                mod = __import__(module, fromlist=["main"])
+                mod.main()
+            except Exception:
+                traceback.print_exc()
+                failures.append(key)
+    print(f"\n[benchmarks] {'ALL OK' if not failures else 'FAILED: ' + ', '.join(failures)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Anatomy of a hierarchical repair (paper §V, Fig. 3) — narrated.
+
+Builds the paper's exact topology figure (16 processes, k=4), kills a
+master, and prints every repair stage with its communicator, participants,
+and S(x) model cost — then compares against the flat shrink and sweeps the
+cluster size to show the crossover the paper derives in Eq. 2.
+
+  PYTHONPATH=src python examples/hierarchical_repair.py
+"""
+from repro.core import LegioPolicy, ShrinkCostModel, ShrinkEngine
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import optimal_k_linear
+
+
+def main() -> None:
+    topo = LegionTopology.build(list(range(16)), 4)
+    print("topology: 16 nodes, k=4")
+    for lg in topo.legions:
+        print(f"  legion {lg.index}: members {lg.members} "
+              f"(master {lg.master}, POV {topo.pov(lg.index)})")
+
+    eng = ShrinkEngine(LegioPolicy(), ShrinkCostModel(p=1.0))
+    victim = topo.legions[1].master
+    print(f"\nkilling node {victim} — master of legion 1. Repair plan:")
+    report = eng.repair(topo, {victim})
+    for i, step in enumerate(report.steps):
+        print(f"  {i + 1}. {step.op:8s} on {step.comm:9s} "
+              f"participants={list(step.participants)} "
+              f"S(x) cost={step.cost_units:.4f}s")
+    print(f"total model cost {report.model_cost:.4f}s "
+          f"vs flat shrink {eng.cost_flat(16):.4f}s")
+    print(f"new master of legion 1: {topo.legion_of(victim + 1).master}")
+
+    print("\nexpected repair cost vs cluster size (Eq. 1, P(master)=1/k):")
+    print(f"{'s':>6} {'k*':>4} {'flat S(s)':>10} {'E[R_H]':>10} {'win':>6}")
+    for s in (16, 64, 256, 1024, 4096):
+        k = optimal_k_linear(s)
+        flat = eng.cost_flat(s)
+        hier = eng.expected_repair_cost(s, k)
+        print(f"{s:6d} {k:4d} {flat:10.3f} {hier:10.3f} "
+              f"{flat / hier:5.1f}x")
+
+
+if __name__ == "__main__":
+    main()

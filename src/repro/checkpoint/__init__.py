@@ -1,0 +1,17 @@
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    CheckpointManifest,
+    latest_step,
+    restore,
+    restore_member,
+    save,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "CheckpointManifest",
+    "latest_step",
+    "restore",
+    "restore_member",
+    "save",
+]

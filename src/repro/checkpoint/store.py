@@ -1,0 +1,321 @@
+"""Sharded, per-legion checkpoint store (the §VII / MANA analogue).
+
+Layout::
+
+    <dir>/step_000120/
+        manifest.json                 # step, tree structure, checksums, legion map
+        legion_00/member_000.npz      # one file per (legion, member)
+        legion_00/member_001.npz
+        legion_01/member_000.npz
+        ...
+
+Properties the paper's design asks for:
+
+  * **No global barrier**: each legion directory is self-contained and
+    written independently (file ops run on the local_comm — paper §V
+    "File operations"); the manifest is finalized by whoever finishes last
+    (atomic rename, idempotent content).
+  * **Restart-only-failed**: ``restore_member`` loads exactly one member's
+    shard set; a replacement node never touches other members' files.
+  * **Async**: ``AsyncCheckpointer`` snapshots device arrays to host
+    (blocking only on the copy), then writes in a background thread —
+    training continues during serialization.
+
+Arrays are stored as npz with tree paths flattened to ``/``-joined keys.
+bfloat16 has no numpy dtype, so bf16 leaves are bit-cast to uint16 and the
+manifest records the logical dtype.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: PyTree) -> dict[str, jax.Array]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return entry.name
+    return str(entry)
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    """Returns (storable array, logical dtype string)."""
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical == "bfloat16":
+        return arr.view(jnp.bfloat16)
+    return arr
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# manifest
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CheckpointManifest:
+    step: int
+    n_legions: int
+    members: dict[str, list[int]]          # legion id -> member node ids
+    files: dict[str, dict] = field(default_factory=dict)  # relpath -> {keys, dtypes, checksums}
+    meta: dict = field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "step": self.step,
+            "n_legions": self.n_legions,
+            "members": self.members,
+            "files": self.files,
+            "meta": self.meta,
+        }, indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "CheckpointManifest":
+        d = json.loads(s)
+        return CheckpointManifest(
+            step=d["step"], n_legions=d["n_legions"], members=d["members"],
+            files=d["files"], meta=d.get("meta", {}),
+        )
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:06d}")
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and \
+           os.path.exists(os.path.join(directory, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# save / restore
+# ---------------------------------------------------------------------------
+
+def _write_npz_atomic(path: str, arrays: dict[str, np.ndarray]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **arrays)  # keeps the name: it already ends in .npz
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def save(
+    directory: str,
+    step: int,
+    shards: dict[tuple[int, int], PyTree],
+    *,
+    meta: dict | None = None,
+    verify: bool = True,
+) -> CheckpointManifest:
+    """shards: {(legion_id, node_id): state pytree} -> one npz per member."""
+    sdir = _step_dir(directory, step)
+    os.makedirs(sdir, exist_ok=True)
+    members: dict[str, list[int]] = {}
+    files: dict[str, dict] = {}
+    for (legion, node), tree in sorted(shards.items()):
+        members.setdefault(str(legion), []).append(node)
+        rel = os.path.join(f"legion_{legion:02d}", f"member_{node:03d}.npz")
+        flat = _flatten(tree)
+        store: dict[str, np.ndarray] = {}
+        dtypes: dict[str, str] = {}
+        sums: dict[str, str] = {}
+        for key, leaf in flat.items():
+            arr, logical = _to_numpy(leaf)
+            store[key] = arr
+            dtypes[key] = logical
+            if verify:
+                sums[key] = _checksum(arr)
+        _write_npz_atomic(os.path.join(sdir, rel), store)
+        files[rel] = {"dtypes": dtypes, "checksums": sums}
+    manifest = CheckpointManifest(
+        step=step, n_legions=len(members), members=members, files=files,
+        meta=meta or {},
+    )
+    tmp = os.path.join(sdir, ".manifest.tmp")
+    with open(tmp, "w") as f:
+        f.write(manifest.to_json())
+    os.replace(tmp, os.path.join(sdir, "manifest.json"))
+    return manifest
+
+
+def _load_npz(path: str, info: dict, template: PyTree | None, verify: bool) -> PyTree:
+    with np.load(path) as z:
+        flat = {}
+        for key in z.files:
+            arr = z[key]
+            if verify and info["checksums"]:
+                got = _checksum(arr)
+                want = info["checksums"].get(key)
+                if want and got != want:
+                    raise IOError(f"checksum mismatch for {key} in {path}")
+            flat[key] = _from_numpy(arr, info["dtypes"][key])
+    if template is None:
+        # rebuild a nested dict from '/'-joined keys (only dict-of-dict trees)
+        out: dict = {}
+        for key, arr in flat.items():
+            parts = key.split("/")
+            d = out
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = jnp.asarray(arr)
+        return out
+    tmpl_flat = _flatten(template)
+    assert set(tmpl_flat) == set(flat), (
+        f"checkpoint tree mismatch: {set(tmpl_flat) ^ set(flat)}")
+    leaves = [jnp.asarray(flat[k]) for k in tmpl_flat]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+
+
+def restore_member(
+    directory: str,
+    step: int,
+    legion: int,
+    node: int,
+    *,
+    template: PyTree | None = None,
+    verify: bool = True,
+) -> PyTree:
+    """Load exactly one member's shard — the restart-only-failed path."""
+    sdir = _step_dir(directory, step)
+    with open(os.path.join(sdir, "manifest.json")) as f:
+        manifest = CheckpointManifest.from_json(f.read())
+    rel = os.path.join(f"legion_{legion:02d}", f"member_{node:03d}.npz")
+    if rel not in manifest.files:
+        raise FileNotFoundError(f"no shard for legion={legion} node={node} at step {step}")
+    return _load_npz(os.path.join(sdir, rel), manifest.files[rel], template, verify)
+
+
+def restore(
+    directory: str,
+    step: int,
+    *,
+    template: PyTree | None = None,
+    verify: bool = True,
+) -> tuple[CheckpointManifest, dict[tuple[int, int], PyTree]]:
+    sdir = _step_dir(directory, step)
+    with open(os.path.join(sdir, "manifest.json")) as f:
+        manifest = CheckpointManifest.from_json(f.read())
+    shards = {}
+    for legion_s, nodes in manifest.members.items():
+        for node in nodes:
+            legion = int(legion_s)
+            shards[(legion, node)] = restore_member(
+                directory, step, legion, node, template=template, verify=verify)
+    return manifest, shards
+
+
+# ---------------------------------------------------------------------------
+# async writer
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, serialize in a background thread.
+
+    ``save_async`` returns as soon as leaves are fetched to host memory;
+    the npz write + manifest rename happen off-thread. ``wait()`` drains
+    pending writes (call before reading back or at shutdown).
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: list[BaseException] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_shards, meta = item
+            try:
+                save(self.directory, step, host_shards, meta=meta)
+                self._gc()
+            except BaseException as e:  # surfaced on wait()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_"))
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            sdir = _step_dir(self.directory, s)
+            manifest = os.path.join(sdir, "manifest.json")
+            if os.path.exists(manifest):
+                for root, _, names in os.walk(sdir, topdown=False):
+                    for n in names:
+                        os.unlink(os.path.join(root, n))
+                    if root != sdir:
+                        os.rmdir(root)
+                os.rmdir(sdir)
+
+    def save_async(self, step: int, shards: dict[tuple[int, int], PyTree],
+                   *, meta: dict | None = None) -> float:
+        """Returns seconds spent blocking (device->host snapshot only)."""
+        t0 = time.perf_counter()
+        host = {
+            key: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            for key, tree in shards.items()
+        }
+        self._q.put((step, host, meta))
+        return time.perf_counter() - t0
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err.pop()
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

@@ -1,0 +1,77 @@
+"""Legio core — the paper's contribution as a composable JAX runtime.
+
+Layering (paper section -> module):
+  §V  hierarchy      legions / masters / POVs / ring
+  §III detector      heartbeats, noticing semantics (BNP), stragglers
+  §IV agreement      fault agreement (BNP fix), in-program bitmap psum
+  §V  shrink         S(x) cost model, Eq. 1-4, Fig. 3 repair plans
+  §V  collectives    hierarchical op schedules + shard_map psum variants
+  §IV batch          DROP / REBALANCE shard reassignment
+  —   mesh_manager   survivors -> jax.Mesh, reshard, compile cache
+  §IV executor       transparent run -> detect -> agree -> repair loop
+  §VII cr            per-legion C/R, restart-only-failed
+  —   trainer        SPMD resilient training integration
+"""
+from repro.core.agreement import agree_fault, agreement_rounds, liveness_psum
+from repro.core.batch import (
+    BatchPlan,
+    gradient_scale,
+    initial_assignment,
+    reassign,
+)
+from repro.core.collectives import (
+    HierarchicalCollectives,
+    LinkModel,
+    agreement_time,
+    flat_collective_time,
+    hierarchical_psum,
+    hierarchical_psum_scatter,
+    make_hierarchical_allreduce,
+)
+from repro.core.cr import LegionCheckpointer
+from repro.core.detector import (
+    FaultInjector,
+    HeartbeatDetector,
+    StragglerDetector,
+    notice_fault,
+)
+from repro.core.executor import (
+    LegioExecutor,
+    RootFailedError,
+    StepReport,
+    VirtualCluster,
+)
+from repro.core.hierarchy import Legion, LegionTopology, make_topology
+from repro.core.mesh_manager import CompileCache, DevicePool, MeshManager
+from repro.core.policy import (
+    LegioPolicy,
+    eq3_s_of_k,
+    eq4_s_of_k,
+    optimal_k_linear,
+    optimal_k_quadratic,
+)
+from repro.core.shrink import ShrinkCostModel, ShrinkEngine
+from repro.core.trainer import ResilientTrainer, TrainerReport, make_train_step
+from repro.core.types import (
+    FailureEvent,
+    FailureKind,
+    NodeState,
+    OpStatus,
+    RepairReport,
+    RepairStep,
+)
+
+__all__ = [
+    "BatchPlan", "CompileCache", "DevicePool", "FailureEvent", "FailureKind",
+    "FaultInjector", "HeartbeatDetector", "HierarchicalCollectives",
+    "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
+    "LegioPolicy", "LinkModel", "MeshManager", "NodeState", "OpStatus",
+    "RepairReport", "RepairStep", "ResilientTrainer", "RootFailedError",
+    "ShrinkCostModel", "ShrinkEngine", "StepReport", "StragglerDetector",
+    "TrainerReport", "VirtualCluster", "agree_fault", "agreement_rounds",
+    "agreement_time", "flat_collective_time", "gradient_scale",
+    "hierarchical_psum", "hierarchical_psum_scatter", "initial_assignment",
+    "liveness_psum", "make_hierarchical_allreduce", "make_topology",
+    "make_train_step", "notice_fault", "optimal_k_linear",
+    "optimal_k_quadratic", "eq3_s_of_k", "eq4_s_of_k", "reassign",
+]

@@ -1,0 +1,90 @@
+"""Batch-shard reassignment — the rank-translation policy analogue (§IV).
+
+When an MPI rank dies mid-operation Legio either IGNOREs the op or STOPs the
+application. In data-parallel ML the per-rank artifact is the *batch shard*;
+the corresponding policies are:
+
+  DROP       — survivors keep their own shards; the failed node's shards are
+               simply not computed this step. The gradient mean renormalizes
+               over survivors (smaller batch, unbiased estimator — exactly
+               the paper's Monte-Carlo "approximate result" trade-off).
+  REBALANCE  — the failed node's shards are redistributed round-robin over
+               survivors (exact batch, more work per survivor). Possible
+               here because the data pipeline is counter-based: any node can
+               regenerate any shard bit-exactly (see data/pipeline.py).
+
+Assignments are pure data (no device state), so reassignment is O(shards).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.data.pipeline import ShardAssignment
+
+
+@dataclass(frozen=True)
+class BatchPlan:
+    assignments: tuple[ShardAssignment, ...]
+    dropped_shards: tuple[int, ...]
+    policy: str
+
+    @property
+    def active_shards(self) -> int:
+        return sum(len(a.shards) for a in self.assignments)
+
+    def shards_of(self, node: int) -> tuple[int, ...]:
+        for a in self.assignments:
+            if a.node == node:
+                return a.shards
+        return ()
+
+
+def initial_assignment(nodes: list[int], shards_per_node: int = 1) -> BatchPlan:
+    """Node i owns shards [i*spn, (i+1)*spn) — the no-fault layout."""
+    asg = tuple(
+        ShardAssignment(node=n, shards=tuple(
+            i * shards_per_node + j for j in range(shards_per_node)))
+        for i, n in enumerate(sorted(nodes))
+    )
+    return BatchPlan(assignments=asg, dropped_shards=(), policy="initial")
+
+
+def reassign(
+    plan: BatchPlan,
+    failed: set[int],
+    policy: str,
+) -> BatchPlan:
+    """Apply DROP or REBALANCE after ``failed`` nodes left the cluster."""
+    survivors = [a for a in plan.assignments if a.node not in failed]
+    orphans: list[int] = sorted(
+        s for a in plan.assignments if a.node in failed for s in a.shards
+    )
+    if policy == "drop" or not survivors:
+        return BatchPlan(
+            assignments=tuple(survivors),
+            dropped_shards=tuple(sorted(set(plan.dropped_shards) | set(orphans))),
+            policy="drop",
+        )
+    if policy == "rebalance":
+        buckets: dict[int, list[int]] = {a.node: list(a.shards) for a in survivors}
+        order = sorted(buckets, key=lambda n: (len(buckets[n]), n))
+        for i, shard in enumerate(orphans):
+            buckets[order[i % len(order)]].append(shard)
+        return BatchPlan(
+            assignments=tuple(
+                ShardAssignment(node=n, shards=tuple(sorted(buckets[n])))
+                for n in sorted(buckets)
+            ),
+            dropped_shards=plan.dropped_shards,
+            policy="rebalance",
+        )
+    raise ValueError(f"unknown batch policy {policy!r}")
+
+
+def gradient_scale(plan: BatchPlan, total_shards: int) -> float:
+    """Weight for the gradient mean so the estimator renormalizes over the
+    shards actually computed (DROP shrinks the denominator)."""
+    active = plan.active_shards
+    if active == 0:
+        return 0.0
+    return float(total_shards) / float(active)

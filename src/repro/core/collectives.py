@@ -1,0 +1,314 @@
+"""Collective operations over the legion topology (paper §V classes).
+
+Two layers:
+
+1. **Runtime schedules** — the paper's operation classes (one-to-one,
+   one-to-all, all-to-one, all-to-all, comm-creator, file, local-only) with
+   their hierarchical execution plans (Fig. 4): a Bcast runs in the root's
+   local_comm, then the global_comm, then the other local_comms in parallel;
+   a Reduce is the reverse; an AllReduce is reduce-then-bcast. The schedules
+   both (a) actually move data on the virtual cluster (correctness is
+   testable: every survivor receives the root's payload / the full sum) and
+   (b) produce an alpha-beta time estimate, so the paper's Fig. 5-9 overhead
+   benchmarks have a deterministic analogue on CPU.
+
+2. **In-program collectives** — ``shard_map`` implementations used by the
+   SPMD train step: :func:`hierarchical_psum` performs the two-stage
+   reduction (within-legion, then cross-legion) that maps onto intra-pod ICI
+   + cross-pod DCI on real hardware.
+
+Alpha-beta model: a collective over x participants moving m bytes per rank
+costs ``ceil(log2 x) * (alpha + m / beta)`` (binomial tree). Intra-legion
+hops ride fast links; the cross-legion (global_comm) hop rides slow links —
+the constants mirror TPU ICI vs DCI (see roofline constants).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.hierarchy import LegionTopology
+
+# Operation classes (paper §V)
+ONE_TO_ONE = "one_to_one"
+ONE_TO_ALL = "one_to_all"
+ALL_TO_ONE = "all_to_one"
+ALL_TO_ALL = "all_to_all"
+COMM_CREATOR = "comm_creator"
+FILE_OP = "file"
+LOCAL_ONLY = "local_only"
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """alpha (s) / beta (B/s) per link class. Defaults: ICI-ish intra,
+    DCI-ish cross (an order of magnitude slower — why the hierarchical
+    schedule confines bulk traffic to fast links)."""
+
+    alpha_intra: float = 1.0e-6
+    beta_intra: float = 50.0e9        # ~ICI per-link
+    alpha_cross: float = 10.0e-6
+    beta_cross: float = 5.0e9         # ~DCI / data-center network
+
+    def tree_time(self, participants: int, nbytes: int, cross: bool) -> float:
+        if participants <= 1:
+            return 0.0
+        rounds = math.ceil(math.log2(participants))
+        a = self.alpha_cross if cross else self.alpha_intra
+        b = self.beta_cross if cross else self.beta_intra
+        return rounds * (a + nbytes / b)
+
+
+@dataclass
+class CollectiveResult:
+    """Outcome of one scheduled collective on the virtual cluster."""
+    op: str
+    sim_seconds: float                      # alpha-beta estimate
+    data: dict[int, np.ndarray]             # node -> payload after the op
+    stages: list[tuple[str, int, float]]    # (comm, participants, seconds)
+
+
+class HierarchicalCollectives:
+    """Executes the paper's §V schedules over a LegionTopology.
+
+    ``compression`` (beyond-paper) applies int8/top-k error-feedback
+    compression to the *cross-legion* hop only — the master-to-master stage
+    rides the slow links, so that is where volume reduction pays (see
+    optim/compression.py). ``residuals`` is the per-master error-feedback
+    store; pass a persistent dict (the VirtualCluster owns one) so residuals
+    survive across steps — dead masters' residuals are simply abandoned,
+    which is safe (their contribution was already incorporated or lost with
+    the node, exactly like its batch shard).
+    """
+
+    def __init__(self, topo: LegionTopology, link: LinkModel | None = None,
+                 *, compression: str = "none", topk_fraction: float = 0.05,
+                 residuals: dict | None = None):
+        self.topo = topo
+        self.link = link or LinkModel()
+        self.compression = compression
+        self.topk_fraction = topk_fraction
+        self.residuals = residuals if residuals is not None else {}
+
+    def _compress_cross(self, master: int, partial: np.ndarray
+                        ) -> tuple[np.ndarray, int]:
+        """Error-feedback compress one master's partial for the slow hop.
+        Returns (decompressed-at-receiver value, wire bytes)."""
+        from repro.optim import compression as C
+        gf = partial.astype(np.float32) + self.residuals.get(master, 0.0)
+        if self.compression == "int8":
+            payload = C.compress_int8(jnp_asarray(gf))
+            back = np.asarray(C.decompress_int8(payload))
+        elif self.compression == "topk":
+            payload = C.compress_topk(jnp_asarray(gf), self.topk_fraction)
+            back = np.asarray(C.decompress_topk(payload, gf.shape))
+        else:
+            return partial, partial.nbytes
+        self.residuals[master] = gf - back
+        nbytes = C.compressed_bytes(jnp_asarray(gf), self.compression,
+                                    self.topk_fraction)
+        return back, nbytes
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _stage(self, stages, comm, n, nbytes, cross):
+        t = self.link.tree_time(n, nbytes, cross)
+        stages.append((comm, n, t))
+        return t
+
+    # -- one-to-all (Bcast): root legion -> global -> other legions (Fig. 4) ----
+
+    def bcast(self, root: int, payload: np.ndarray) -> CollectiveResult:
+        topo = self.topo
+        nbytes = payload.nbytes
+        stages: list[tuple[str, int, float]] = []
+        data = {root: payload}
+        t_total = 0.0
+        if topo.n_legions == 1:
+            lg = topo.legions[0]
+            t_total += self._stage(stages, "world", len(lg), nbytes, cross=False)
+            for n in lg.members:
+                data[n] = payload
+            return CollectiveResult("bcast", t_total, data, stages)
+        root_lg = topo.legion_of(root)
+        # 1. root's local_comm
+        t_total += self._stage(stages, f"local_{root_lg.index}", len(root_lg),
+                               nbytes, cross=False)
+        for n in root_lg.members:
+            data[n] = payload
+        # 2. global_comm (masters) — the cross-legion hop
+        masters = topo.masters
+        t_total += self._stage(stages, "global", len(masters), nbytes, cross=True)
+        for m in masters:
+            data[m] = payload
+        # 3. all other local_comms in parallel (max over legions)
+        t_par = 0.0
+        for lg in topo.legions:
+            if lg.index == root_lg.index or not lg.members:
+                continue
+            t = self._stage(stages, f"local_{lg.index}", len(lg), nbytes, cross=False)
+            t_par = max(t_par, t)
+            for n in lg.members:
+                data[n] = payload
+        return CollectiveResult("bcast", t_total + t_par, data, stages)
+
+    # -- all-to-one (Reduce): reverse propagation (Fig. 4) ----------------------
+
+    def reduce(self, root: int, contributions: dict[int, np.ndarray],
+               op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add
+               ) -> CollectiveResult:
+        topo = self.topo
+        sample = next(iter(contributions.values()))
+        nbytes = sample.nbytes
+        stages: list[tuple[str, int, float]] = []
+        if topo.n_legions == 1:
+            lg = topo.legions[0]
+            t = self._stage(stages, "world", len(lg), nbytes, cross=False)
+            total = _tree_reduce(
+                [contributions[n] for n in lg.members if n in contributions], op)
+            return CollectiveResult("reduce", t, {root: total}, stages)
+        # 1. each local_comm reduces to its master — in parallel
+        t_par = 0.0
+        partials: dict[int, np.ndarray] = {}
+        for lg in topo.legions:
+            if not lg.members:
+                continue
+            t = self._stage(stages, f"local_{lg.index}", len(lg), nbytes, cross=False)
+            t_par = max(t_par, t)
+            partials[lg.master] = _tree_reduce(
+                [contributions[n] for n in lg.members if n in contributions], op)
+        # 2. global_comm reduces master partials to the root's master —
+        #    the slow hop: compress here (sum-compatible ops only)
+        masters = topo.masters
+        cross_bytes = nbytes
+        if self.compression != "none" and op in (np.add,):
+            sent = [self._compress_cross(m, partials[m]) for m in masters]
+            total = _tree_reduce([s[0] for s in sent], op)
+            cross_bytes = max(s[1] for s in sent)
+        else:
+            total = _tree_reduce([partials[m] for m in masters], op)
+        t_cross = self._stage(stages, "global", len(masters), cross_bytes,
+                              cross=True)
+        # 3. if the root is not its legion's master, one intra hop delivers it
+        root_lg = topo.legion_of(root)
+        t_last = 0.0
+        if root != root_lg.master:
+            t_last = self._stage(stages, f"local_{root_lg.index}", 2, nbytes,
+                                 cross=False)
+        return CollectiveResult("reduce", t_par + t_cross + t_last,
+                                {root: total}, stages)
+
+    # -- all-to-all (AllReduce) = all-to-one + one-to-all (paper §V) -----------
+
+    def allreduce(self, contributions: dict[int, np.ndarray],
+                  op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add
+                  ) -> CollectiveResult:
+        topo = self.topo
+        root = topo.masters[0] if topo.masters else topo.nodes[0]
+        red = self.reduce(root, contributions, op)
+        bc = self.bcast(root, red.data[root])
+        return CollectiveResult(
+            "allreduce", red.sim_seconds + bc.sim_seconds, bc.data,
+            red.stages + bc.stages)
+
+    # -- barrier: an allreduce of zero-byte tokens ------------------------------
+
+    def barrier(self) -> CollectiveResult:
+        token = np.zeros((1,), np.int8)
+        contributions = {n: token for n in self.topo.nodes}
+        res = self.allreduce(contributions, np.maximum)
+        return CollectiveResult("barrier", res.sim_seconds,
+                                {n: token for n in self.topo.nodes}, res.stages)
+
+    # -- comm-creator: must run on the ENTIRE communicator (paper §V) -----------
+
+    def comm_create(self) -> CollectiveResult:
+        n = self.topo.size
+        stages: list[tuple[str, int, float]] = []
+        t = self._stage(stages, "world", n, 64, cross=True)
+        return CollectiveResult("comm_creator", t, {}, stages)
+
+    # -- file / local ops: bounded to the local_comm (no propagation) -----------
+
+    def file_op(self, node: int, nbytes: int) -> CollectiveResult:
+        lg = self.topo.legion_of(node)
+        stages: list[tuple[str, int, float]] = []
+        t = self._stage(stages, f"local_{lg.index}", len(lg), 0, cross=False)
+        return CollectiveResult("file", t, {}, stages)
+
+    def local_op(self, node: int) -> CollectiveResult:
+        return CollectiveResult("local_only", 0.0, {}, [])
+
+
+def jnp_asarray(x: np.ndarray):
+    return jnp.asarray(x)
+
+
+def _tree_reduce(parts: list[np.ndarray], op) -> np.ndarray:
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = op(acc, p)
+    return acc
+
+
+def flat_collective_time(link: LinkModel, op: str, n: int, nbytes: int) -> float:
+    """Baseline (non-hierarchical) time: one binomial tree over everyone,
+    crossing slow links (a flat communicator cannot confine traffic)."""
+    if op == ALL_TO_ALL:
+        return 2.0 * link.tree_time(n, nbytes, cross=True)
+    return link.tree_time(n, nbytes, cross=True)
+
+
+def agreement_time(link: LinkModel, n: int) -> float:
+    """Cost of the post-collective fault agreement (BNP fix): one zero-byte
+    allreduce over n participants — Legio's per-call overhead."""
+    return 2.0 * link.tree_time(n, 8, cross=True)
+
+
+# ---------------------------------------------------------------------------
+# In-program (shard_map) collectives — the SPMD production path
+# ---------------------------------------------------------------------------
+
+def hierarchical_psum(x: jax.Array, *, legion_axis: str, member_axis: str) -> jax.Array:
+    """Two-stage all-reduce: within-legion first (fast links), then
+    cross-legion (slow links). Numerically identical to
+    ``psum(x, (member, legion))``; structurally it pins the reduction order
+    so the compiler's collective schedule matches the paper's Fig. 4."""
+    x = jax.lax.psum(x, member_axis)
+    return jax.lax.psum(x, legion_axis)
+
+
+def hierarchical_psum_scatter(x: jax.Array, *, legion_axis: str,
+                              member_axis: str, scatter_dim: int = 0) -> jax.Array:
+    """Bandwidth-optimal variant: reduce-scatter within the legion, all-reduce
+    the shards across legions, leaving the result scattered over members
+    (caller all-gathers after the optimizer update — ZeRO-style)."""
+    x = jax.lax.psum_scatter(x, member_axis, scatter_dimension=scatter_dim,
+                             tiled=True)
+    return jax.lax.psum(x, legion_axis)
+
+
+def make_hierarchical_allreduce(mesh: Mesh, spec: P):
+    """jit-able fn(x) -> allreduce(x) over the mesh's data axes, two-stage.
+
+    On the multi-pod mesh ('pod','data','model') the legion axis is 'pod'
+    (cross-DCI) and the member axis is 'data' (intra-ICI); single-pod falls
+    back to one-stage psum over 'data'.
+    """
+    names = mesh.axis_names
+    has_pod = "pod" in names
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec, out_specs=spec)
+    def _allreduce(x):
+        if has_pod:
+            return hierarchical_psum(x, legion_axis="pod", member_axis="data")
+        return jax.lax.psum(x, "data")
+
+    return jax.jit(_allreduce)

@@ -1,0 +1,288 @@
+"""LegioExecutor — the transparent fault-resiliency loop (paper §IV).
+
+PMPI interposition has no JAX analogue at the call level; the equivalent
+*seam* is the step boundary: applications hand the executor a per-shard work
+function and the executor owns everything Legio owns in MPI — substitute
+structures (the legion topology standing in for the application's
+communicator), post-collective error checking, agreement, repair, and
+shard reassignment. Application code never sees a fault.
+
+Per step:
+  1. run every live node's shard work (EP: no interaction until the final
+     collective — exactly the paper's target class);
+  2. the step-final collective (reduce of results / gradient psum) runs on
+     the substitute topology; injected faults surface there, with
+     bcast-shaped ops noticing only partially (BNP, detector.notice_fault);
+  3. agreement unifies the survivors' verdicts (agreement.agree_fault);
+  4. the shrink engine repairs the topology (flat or hierarchical per
+     policy), masters are re-elected, and the batch plan is reassigned
+     (DROP / REBALANCE);
+  5. if the op's root died: IGNORE (skip, buffers unchanged) or STOP
+     (raise) per ``policy.root_failure_policy`` — the paper's compile-time
+     knob, here a config value.
+
+Straggler mitigation (beyond-paper): step latencies feed a
+StragglerDetector; flagged nodes are soft-failed through the *same* repair
+path (FailureKind.STRAGGLE) — the paper's discard semantics applied to
+performance faults.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.agreement import agree_fault
+from repro.core.batch import BatchPlan, gradient_scale, initial_assignment, reassign
+from repro.core.collectives import HierarchicalCollectives, LinkModel
+from repro.core.detector import (
+    FaultInjector,
+    HeartbeatDetector,
+    StragglerDetector,
+    notice_fault,
+)
+from repro.core.hierarchy import LegionTopology, make_topology
+from repro.core.policy import LegioPolicy
+from repro.core.shrink import ShrinkEngine
+from repro.core.types import (
+    ClusterClock,
+    FailureEvent,
+    FailureKind,
+    NodeState,
+    RepairReport,
+)
+
+
+class RootFailedError(RuntimeError):
+    """Raised under the STOP policy when an operation's root has failed."""
+
+
+@dataclass
+class StepReport:
+    step: int
+    results: dict[int, Any]                  # node -> shard work output
+    reduced: Any | None                      # step-final collective output
+    failed_now: tuple[int, ...] = ()
+    repair: RepairReport | None = None
+    skipped_op: bool = False                 # IGNORE policy fired
+    sim_collective_seconds: float = 0.0
+    wall_seconds: float = 0.0
+    grad_scale: float = 1.0
+
+
+class VirtualCluster:
+    """A simulated cluster: N logical nodes, ground-truth failure state,
+    simulated clock, and the Legio substitute structures."""
+
+    def __init__(
+        self,
+        n_nodes: int,
+        policy: LegioPolicy | None = None,
+        injector: FaultInjector | None = None,
+        link: LinkModel | None = None,
+        shards_per_node: int = 1,
+    ):
+        self.policy = policy or LegioPolicy()
+        self.injector = injector or FaultInjector()
+        self.link = link or LinkModel()
+        self.nodes = list(range(n_nodes))
+        self.n_initial = n_nodes
+        self.topo: LegionTopology = make_topology(self.nodes, self.policy)
+        self.detector = HeartbeatDetector(timeout=self.policy.heartbeat_timeout)
+        for n in self.nodes:
+            self.detector.register(n)
+        self.straggler = StragglerDetector(threshold=self.policy.straggler_threshold)
+        self.shrink = ShrinkEngine(self.policy)
+        self.clock = ClusterClock()
+        self.failed: set[int] = set()            # ground truth (hidden from app)
+        self.plan: BatchPlan = initial_assignment(self.nodes, shards_per_node)
+        self.shards_per_node = shards_per_node
+        self.total_shards = n_nodes * shards_per_node
+        self.spares: list[int] = [n_nodes + i for i in range(self.policy.spare_nodes)]
+        self.repairs: list[RepairReport] = []
+        # error-feedback residuals for compressed cross-legion reduction
+        self.compress_residuals: dict[int, Any] = {}
+
+    # -- fault plumbing ---------------------------------------------------------
+
+    def inject(self, step: int) -> list[FailureEvent]:
+        events = self.injector.due(step)
+        for e in events:
+            if e.node in self.topo.nodes:
+                self.failed.add(e.node)
+        return events
+
+    def collectives(self) -> HierarchicalCollectives:
+        return HierarchicalCollectives(
+            self.topo, self.link,
+            compression=self.policy.grad_compression,
+            topk_fraction=self.policy.topk_fraction,
+            residuals=self.compress_residuals)
+
+    @property
+    def live_nodes(self) -> list[int]:
+        return [n for n in self.topo.nodes if n not in self.failed]
+
+    # -- repair -------------------------------------------------------------------
+
+    def repair(self, verdict: set[int]) -> RepairReport | None:
+        if not verdict:
+            return None
+        report = self.shrink.repair(self.topo, verdict)
+        for n in verdict:
+            self.detector.confirm_failed(n)
+            self.straggler.drop(n)
+        self.clock.charge(report.model_cost)
+        # elastic regrow: pull spares into the smallest legion (beyond-paper)
+        grown = []
+        while self.spares and self.topo.size < self.n_initial \
+                and self.policy.spare_nodes > 0:
+            spare = self.spares.pop(0)
+            target = min((lg for lg in self.topo.legions if lg.members),
+                         key=len, default=None)
+            if target is None:
+                self.topo = make_topology([spare], self.policy)
+            else:
+                target.members.append(spare)
+                target.members.sort()
+                self.topo.home[spare] = target.index
+            self.detector.register(spare)
+            grown.append(spare)
+        if grown:
+            from repro.core.types import RepairStep
+            report.steps.append(RepairStep(
+                op="include", comm="world", participants=tuple(grown),
+                cost_units=0.0))
+        self.plan = reassign(self.plan, verdict, self.policy.batch_policy)
+        if grown:
+            # new members take over dropped shards (restart-only-failed)
+            extra = initial_assignment(grown, self.shards_per_node)
+            take = list(self.plan.dropped_shards)
+            new_assignments = list(self.plan.assignments)
+            for a in extra.assignments:
+                shards = tuple(take.pop(0) for _ in a.shards if take)
+                new_assignments.append(type(a)(node=a.node, shards=shards))
+            self.plan = BatchPlan(
+                assignments=tuple(new_assignments),
+                dropped_shards=tuple(take),
+                policy=self.plan.policy)
+        self.repairs.append(report)
+        return report
+
+
+class LegioExecutor:
+    """Runs per-shard work under transparent fault resiliency."""
+
+    def __init__(
+        self,
+        cluster: VirtualCluster,
+        work_fn: Callable[[int, int, int], Any],
+        *,
+        reduce_op: Callable[[Any, Any], Any] | None = None,
+        final_collective: str = "allreduce",   # allreduce | reduce | bcast | none
+        root: int = 0,
+    ):
+        self.cluster = cluster
+        self.work_fn = work_fn
+        self.reduce_op = reduce_op or np.add
+        self.final_collective = final_collective
+        self.root = root
+        self.step_count = 0
+
+    # -- one transparent step -----------------------------------------------------
+
+    def run_step(self, step: int | None = None) -> StepReport:
+        cl = self.cluster
+        step = self.step_count if step is None else step
+        t_start = time.perf_counter()
+        events = cl.inject(step)
+        del events  # ground truth is hidden; detection is observational
+
+        # 1. per-node shard work (only live nodes actually compute)
+        results: dict[int, Any] = {}
+        for node in cl.live_nodes:
+            t0 = time.perf_counter()
+            shards = cl.plan.shards_of(node)
+            if not shards:
+                continue
+            out = [self.work_fn(node, s, step) for s in shards]
+            results[node] = out[0] if len(out) == 1 else _sum_results(out)
+            cl.straggler.observe(node, time.perf_counter() - t0)
+            cl.detector.beat(node, cl.clock.sim_seconds)
+
+        # 2. step-final collective on the substitute topology
+        live_set = cl.live_nodes
+        failed_in_topo = {n for n in cl.topo.nodes if n in cl.failed}
+        reduced = None
+        sim_t = 0.0
+        skipped = False
+        if self.final_collective != "none" and results:
+            op_kind = "bcast" if self.final_collective == "bcast" else "allreduce"
+            noticers = notice_fault(op_kind, cl.topo.nodes, failed_in_topo,
+                                    root=self.root)
+            # 3. BNP agreement: union of suspicion sets over live observers
+            observations = {obs: set(failed_in_topo) for obs in noticers}
+            verdict = agree_fault(observations, live_set)
+            # paper §IV: presence of fault checked AFTER the op; if confirmed
+            # repair, then repeat the operation.
+            if verdict:
+                if self.root in verdict and self.final_collective in ("bcast", "reduce"):
+                    if cl.policy.root_failure_policy == "stop":
+                        raise RootFailedError(
+                            f"root node {self.root} failed at step {step}")
+                    skipped = True  # IGNORE: skip the op, buffers unchanged
+                repair = cl.repair(verdict)
+            else:
+                repair = None
+            if not skipped:
+                coll = cl.collectives()
+                contributions = {n: np.asarray(v) for n, v in results.items()
+                                 if n in cl.topo.nodes}
+                if self.final_collective == "allreduce":
+                    res = coll.allreduce(contributions, self.reduce_op)
+                    reduced = res.data.get(cl.topo.nodes[0]) if cl.topo.nodes else None
+                elif self.final_collective == "reduce":
+                    rt = self.root if self.root in cl.topo.nodes else cl.topo.nodes[0]
+                    res = coll.reduce(rt, contributions, self.reduce_op)
+                    reduced = res.data[rt]
+                elif self.final_collective == "bcast":
+                    rt = self.root if self.root in cl.topo.nodes else cl.topo.nodes[0]
+                    res = coll.bcast(rt, contributions.get(rt, np.zeros(1)))
+                    reduced = res.data[rt]
+                sim_t = res.sim_seconds
+                cl.clock.charge(sim_t)
+        else:
+            verdict = set(failed_in_topo)
+            repair = cl.repair(verdict) if verdict else None
+
+        # 5. straggler soft-fail (routed through the same repair path)
+        lagging = [n for n in cl.straggler.stragglers() if n in cl.topo.nodes]
+        if lagging:
+            for n in lagging:
+                cl.failed.add(n)
+            cl.repair(set(lagging))
+
+        self.step_count = step + 1
+        return StepReport(
+            step=step,
+            results=results,
+            reduced=reduced,
+            failed_now=tuple(sorted(verdict)) if verdict else (),
+            repair=repair,
+            skipped_op=skipped,
+            sim_collective_seconds=sim_t,
+            wall_seconds=time.perf_counter() - t_start,
+            grad_scale=gradient_scale(cl.plan, cl.total_shards),
+        )
+
+    def run(self, n_steps: int) -> list[StepReport]:
+        return [self.run_step() for _ in range(n_steps)]
+
+
+def _sum_results(outs: list[Any]) -> Any:
+    acc = outs[0]
+    for o in outs[1:]:
+        acc = np.add(acc, o) if isinstance(acc, np.ndarray) else acc + o
+    return acc

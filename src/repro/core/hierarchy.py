@@ -1,0 +1,159 @@
+"""Legion topology — the paper's hierarchical communicator organization (§V).
+
+The target communicator (our cluster of nodes) is split into disjoint
+``local_comm``s (*legions*) of max size ``k``: node with rank ``r`` belongs to
+legion ``r // k`` — the assignment is final (paper: "The assignment of a
+process to a local_comm is final"). A ``global_comm`` holds one *master* per
+legion (the lowest surviving rank). Each legion also has a *POV*
+(Partially-OVerlapped) communicator: its members plus the master of its
+*successor* legion, used exclusively during repair (paper Fig. 2). The last
+legion's successor is the first (a ring).
+
+Properties the paper claims — each is asserted by property tests:
+  (a) #communicators scales linearly with #nodes;
+  (b) every node can reach any other (directly or via masters);
+  (c) there is exactly one master-path between any two legions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.policy import LegioPolicy
+
+
+@dataclass
+class Legion:
+    """One local_comm: members are global node ids, sorted ascending."""
+    index: int
+    members: list[int]
+
+    @property
+    def master(self) -> int:
+        """Paper: the master is the process with the lowest rank."""
+        return min(self.members)
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+
+@dataclass
+class LegionTopology:
+    """The full hierarchical communicator structure over live nodes."""
+
+    k: int                          # max legion size (paper knob)
+    legions: list[Legion]
+    # original (pre-fault) legion index per node — assignment is final
+    home: dict[int, int] = field(default_factory=dict)
+
+    # ---- construction ----------------------------------------------------
+
+    @staticmethod
+    def build(nodes: list[int], k: int) -> "LegionTopology":
+        nodes = sorted(nodes)
+        if k <= 0:
+            raise ValueError(f"legion size k must be positive, got {k}")
+        legions = [
+            Legion(index=i, members=nodes[i * k:(i + 1) * k])
+            for i in range((len(nodes) + k - 1) // k)
+        ]
+        home = {n: i for i, lg in enumerate(legions) for n in lg.members}
+        return LegionTopology(k=k, legions=legions, home=home)
+
+    @staticmethod
+    def flat(nodes: list[int]) -> "LegionTopology":
+        """Degenerate single-legion topology (the non-hierarchical mode)."""
+        nodes = sorted(nodes)
+        lg = Legion(index=0, members=list(nodes))
+        return LegionTopology(k=max(len(nodes), 1), legions=[lg],
+                              home={n: 0 for n in nodes})
+
+    # ---- views -------------------------------------------------------------
+
+    @property
+    def nodes(self) -> list[int]:
+        return sorted(n for lg in self.legions for n in lg.members)
+
+    @property
+    def size(self) -> int:
+        return sum(len(lg) for lg in self.legions)
+
+    @property
+    def n_legions(self) -> int:
+        return len(self.legions)
+
+    @property
+    def masters(self) -> list[int]:
+        """The global_comm membership."""
+        return [lg.master for lg in self.legions if lg.members]
+
+    def legion_of(self, node: int) -> Legion:
+        for lg in self.legions:
+            if node in lg.members:
+                return lg
+        raise KeyError(f"node {node} not in topology")
+
+    def is_master(self, node: int) -> bool:
+        return any(lg.members and lg.master == node for lg in self.legions)
+
+    def successor(self, legion_index: int) -> Legion:
+        order = [lg for lg in self.legions if lg.members]
+        pos = next(i for i, lg in enumerate(order) if lg.index == legion_index)
+        return order[(pos + 1) % len(order)]
+
+    def predecessor(self, legion_index: int) -> Legion:
+        order = [lg for lg in self.legions if lg.members]
+        pos = next(i for i, lg in enumerate(order) if lg.index == legion_index)
+        return order[(pos - 1) % len(order)]
+
+    def pov(self, legion_index: int) -> list[int]:
+        """POV_i = members of legion i + master of the successor (paper Fig. 2)."""
+        lg = next(l for l in self.legions if l.index == legion_index)
+        members = list(lg.members)
+        succ = self.successor(legion_index)
+        if succ.index != legion_index and succ.members:
+            members.append(succ.master)
+        return sorted(members)
+
+    def povs(self) -> dict[int, list[int]]:
+        return {lg.index: self.pov(lg.index) for lg in self.legions if lg.members}
+
+    def n_communicators(self) -> int:
+        """world + per-legion local_comm + per-legion POV + global  — O(n/k)·2+2,
+        i.e. linear in the number of nodes (paper property (a))."""
+        live = [lg for lg in self.legions if lg.members]
+        return 1 + len(live) + len(live) + 1
+
+    def path(self, src: int, dst: int) -> list[int]:
+        """The unique minimal master-relay path (paper property (b)/(c)):
+        src -> master(src) -> master(dst) -> dst, collapsing duplicates."""
+        ls, ld = self.legion_of(src), self.legion_of(dst)
+        hops = [src]
+        if ls.index == ld.index:
+            if dst != src:
+                hops.append(dst)
+            return hops
+        for nxt in (ls.master, ld.master, dst):
+            if hops[-1] != nxt:
+                hops.append(nxt)
+        return hops
+
+    # ---- mutation (repair) --------------------------------------------------
+
+    def remove(self, node: int) -> tuple[int, bool]:
+        """Exclude a failed node. Returns (legion index, was_master)."""
+        lg = self.legion_of(node)
+        was_master = lg.master == node
+        lg.members.remove(node)
+        return lg.index, was_master
+
+    def compact(self) -> None:
+        """Drop empty legions (a legion that lost all members leaves the ring)."""
+        self.legions = [lg for lg in self.legions if lg.members]
+
+
+def make_topology(nodes: list[int], policy: LegioPolicy) -> LegionTopology:
+    """Paper-faithful entry point: hierarchical iff size > threshold (s > 11)."""
+    s = len(nodes)
+    if policy.use_hierarchical(s):
+        return LegionTopology.build(nodes, policy.choose_k(s))
+    return LegionTopology.flat(nodes)

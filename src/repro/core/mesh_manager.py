@@ -1,0 +1,153 @@
+"""Mesh management: survivors -> jax.Mesh, live-state resharding, compile cache.
+
+ULFM's shrink hands back a working communicator; the XLA analogue has three
+parts (the actual cost of "shrink" on a TPU cluster — see DESIGN.md §2):
+
+  (a) rebuild the collective topology  -> a new ``jax.Mesh`` over survivor
+      devices (a failed node removes its whole host = its ICI slice);
+  (b) reshard live state               -> ``jax.device_put`` of params/opt
+      state onto the new mesh (GSPMD moves only the shards that must move);
+  (c) recompile                        -> re-lower the step for the new mesh;
+      memoized in :class:`CompileCache` so a *re-grown* cluster (elastic
+      regrow back to a previously-seen size) reuses the old executable.
+
+A node owns ``chips_per_node`` consecutive devices. The data-parallel axis
+spans nodes; the model axis spans chips within a node, so node failure only
+ever shrinks the data axis — the model axis (which would split tensors) is
+never fractured by a fault. This mirrors the paper's setting where each MPI
+rank's loss removes one worker, not a slice of a tensor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclass
+class DevicePool:
+    """Logical node -> device mapping over the available jax devices.
+
+    With fewer physical devices than nodes (the CPU container), multiple
+    logical nodes map onto the same device — collective *structure* is still
+    exercised; placement is virtual. With enough devices (dry-run's 512, or
+    real TPUs) the mapping is 1:1 and meshes are physical.
+    """
+
+    n_nodes: int
+    chips_per_node: int = 1
+    devices: list = field(default_factory=lambda: list(jax.devices()))
+
+    def node_devices(self, node: int) -> list:
+        want = self.chips_per_node
+        n_dev = len(self.devices)
+        if self.n_nodes * want <= n_dev:
+            return self.devices[node * want:(node + 1) * want]
+        return [self.devices[(node * want + j) % n_dev] for j in range(want)]
+
+    @property
+    def physical(self) -> bool:
+        return self.n_nodes * self.chips_per_node <= len(self.devices)
+
+
+class MeshManager:
+    """Builds survivor meshes and reshards live state after repair."""
+
+    def __init__(self, pool: DevicePool, *, model_axis: int | None = None):
+        self.pool = pool
+        self.model_axis = model_axis or pool.chips_per_node
+
+    def survivor_mesh(self, survivors: list[int]) -> Mesh:
+        """Mesh over the survivors' devices: (data=len(survivors), model=chips).
+
+        Falls back to a (1, 1) virtual mesh when the pool is not physical
+        (CPU container) — the logical shrink still happens at the batch/
+        topology layer; see executor.
+        """
+        survivors = sorted(survivors)
+        if self.pool.physical:
+            devs = np.array(
+                [self.pool.node_devices(n) for n in survivors], dtype=object
+            ).reshape(len(survivors), self.model_axis)
+            return Mesh(devs, ("data", "model"))
+        n_dev = len(self.pool.devices)
+        dp = min(len(survivors), n_dev)
+        devs = np.array(self.pool.devices[:dp], dtype=object).reshape(dp, 1)
+        return Mesh(devs, ("data", "model"))
+
+    @staticmethod
+    def reshard(tree: PyTree, mesh: Mesh, specs: PyTree) -> PyTree:
+        """Move live state onto a (new) mesh. GSPMD computes the minimal
+        redistribution; for a pure data-axis shrink the param shards that
+        lived on survivors stay put."""
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(tree, shardings)
+
+
+@dataclass
+class CompileRecord:
+    compiled: Any
+    lower_seconds: float
+    compile_seconds: float
+    hits: int = 0
+
+
+class CompileCache:
+    """Memoizes jitted executables by (fn, mesh shape, input avals).
+
+    Elastic regrow returns the cluster to a previously-seen size; the repair
+    then skips (c) entirely — the dominant term of S(x) for big programs.
+    """
+
+    def __init__(self):
+        self._store: dict[tuple, CompileRecord] = {}
+
+    @staticmethod
+    def _aval_key(tree: PyTree) -> tuple:
+        leaves = jax.tree.leaves(tree)
+        return tuple((l.shape, str(l.dtype)) for l in leaves)
+
+    def key(self, tag: str, mesh: Mesh, *trees: PyTree) -> tuple:
+        return (tag, tuple(mesh.devices.shape), tuple(mesh.axis_names),
+                tuple(self._aval_key(t) for t in trees))
+
+    def get(self, key: tuple) -> CompileRecord | None:
+        rec = self._store.get(key)
+        if rec is not None:
+            rec.hits += 1
+        return rec
+
+    def put(self, key: tuple, compiled: Any, lower_s: float, compile_s: float
+            ) -> CompileRecord:
+        rec = CompileRecord(compiled, lower_s, compile_s)
+        self._store[key] = rec
+        return rec
+
+    def lower_and_compile(self, tag: str, mesh: Mesh, jitted, *args) -> tuple[Any, bool]:
+        """Returns (compiled-or-jitted callable, cache_hit)."""
+        key = self.key(tag, mesh, args)
+        rec = self.get(key)
+        if rec is not None:
+            return rec.compiled, True
+        t0 = time.perf_counter()
+        lowered = jitted.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        self.put(key, compiled, t1 - t0, t2 - t1)
+        return compiled, False
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._store),
+            "hits": sum(r.hits for r in self._store.values()),
+            "compile_seconds": sum(r.compile_seconds for r in self._store.values()),
+        }

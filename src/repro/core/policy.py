@@ -1,0 +1,70 @@
+"""Legio knobs and the optimal-legion-size relations (paper Eq. 1–4).
+
+The paper exposes exactly two knobs (§V): the maximum size of the
+local_comms (``k``) and a threshold cluster size above which the
+hierarchical organization is used. We add the root-failure policy (§IV:
+IGNORE vs STOP) and the batch policy (our DROP/REBALANCE rank-translation
+analogue) as first-class settings.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def optimal_k_linear(s: int) -> int:
+    """Eq. 3: s = k(k^2 - 2)/2  ->  k (assumes S(x) linear in x).
+
+    Solves k^3 - 2k - 2s = 0 for the positive real root. The paper's
+    Marconi100 runs configure local_comm size with this relation.
+    """
+    if s <= 2:
+        return max(s, 1)
+    # Cardano for t^3 + pt + q with p=-2, q=-2s (one real root for s >= 1)
+    p, q = -2.0, -2.0 * float(s)
+    disc = (q / 2.0) ** 2 + (p / 3.0) ** 3
+    root = (-q / 2.0 + math.sqrt(disc)) ** (1.0 / 3.0) \
+        - ((q / 2.0 + math.sqrt(disc)) ** (1.0 / 3.0) if (q / 2.0 + math.sqrt(disc)) > 0
+           else -(abs(q / 2.0 + math.sqrt(disc)) ** (1.0 / 3.0)))
+    k = max(2, round(root))
+    # snap to the integer minimizing |s - k(k^2-2)/2|
+    best = min((abs(s - kk * (kk * kk - 2) / 2.0), kk) for kk in (k - 1, k, k + 1) if kk >= 2)
+    return best[1]
+
+
+def optimal_k_quadratic(s: int) -> int:
+    """Eq. 4: s = sqrt(2 k^2 (2 k^2 - 1) / 3)  ->  k (S(x) quadratic)."""
+    if s <= 2:
+        return max(s, 1)
+    # s^2 = (4k^4 - 2k^2)/3  ->  4k^4 - 2k^2 - 3s^2 = 0
+    k2 = (1.0 + math.sqrt(1.0 + 12.0 * float(s) ** 2)) / 4.0
+    return max(2, round(math.sqrt(k2)))
+
+
+def eq3_s_of_k(k: int) -> float:
+    return k * (k * k - 2) / 2.0
+
+
+def eq4_s_of_k(k: int) -> float:
+    return math.sqrt(2.0 * k * k * (2.0 * k * k - 1.0) / 3.0)
+
+
+@dataclass(frozen=True)
+class LegioPolicy:
+    legion_size: int = 0                # k; 0 = auto via Eq. 3 (paper's setting)
+    hierarchical_threshold: int = 12    # paper: hierarchy wins for s > 11 (linear S)
+    root_failure_policy: str = "ignore" # ignore | stop (paper §IV)
+    batch_policy: str = "drop"          # drop | rebalance
+    straggler_threshold: float = 3.0    # x median step latency; 0 disables
+    heartbeat_timeout: float = 10.0     # sim seconds
+    grad_compression: str = "none"      # none | int8 | topk (cross-legion hop)
+    topk_fraction: float = 0.05
+    spare_nodes: int = 0                # standby pool for elastic regrow
+
+    def choose_k(self, s: int) -> int:
+        if self.legion_size > 0:
+            return min(self.legion_size, s)
+        return min(optimal_k_linear(s), s)
+
+    def use_hierarchical(self, s: int) -> bool:
+        return s > self.hierarchical_threshold

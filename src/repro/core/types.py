@@ -1,0 +1,76 @@
+"""Core vocabulary of the Legio runtime.
+
+Terminology follows the paper (§III):
+
+  * a node *notices* a fault when an operation it participates in returns
+    ``PROC_FAILED`` (our :class:`OpStatus`);
+  * a communicator is *faulty* when a member has failed but nobody noticed;
+  * a communicator is *failed* once a member noticed.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class NodeState(enum.Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"       # missed heartbeats, not yet agreed failed
+    FAILED = "failed"
+    STRAGGLER = "straggler"   # alive but slower than median * threshold
+    SPARE = "spare"           # standby, can regrow a legion (elastic)
+
+
+class OpStatus(enum.Enum):
+    OK = "ok"
+    PROC_FAILED = "proc_failed"    # MPIX_ERR_PROC_FAILED analogue
+    REVOKED = "revoked"            # communicator revoked
+
+
+class FailureKind(enum.Enum):
+    CRASH = "crash"          # permanent node loss
+    STRAGGLE = "straggle"    # performance fault (soft-failed by policy)
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    node: int
+    step: int
+    kind: FailureKind = FailureKind.CRASH
+
+
+@dataclass
+class RepairStep:
+    """One stage of a repair plan (a shrink, a notify, or a promote)."""
+    op: str                      # "shrink" | "notify" | "promote" | "include"
+    comm: str                    # local_<i> | pov_<i> | global | world
+    participants: tuple[int, ...]
+    cost_units: float = 0.0      # S(x) model cost of this stage
+
+
+@dataclass
+class RepairReport:
+    trigger: tuple[int, ...]             # failed nodes handled by this repair
+    hierarchical: bool
+    master_failed: bool
+    steps: list[RepairStep] = field(default_factory=list)
+    model_cost: float = 0.0              # sum of S(x) stage costs (sim seconds)
+    wall_seconds: float = 0.0            # measured runtime of our repair path
+    recompiled: bool = False
+    survivors: int = 0
+
+    def summary(self) -> str:
+        kind = "hierarchical" if self.hierarchical else "flat"
+        role = "master" if self.master_failed else "worker"
+        return (f"[repair/{kind}] failed={list(self.trigger)} role={role} "
+                f"stages={len(self.steps)} model_cost={self.model_cost:.4f}s "
+                f"wall={self.wall_seconds * 1e3:.2f}ms survivors={self.survivors}")
+
+
+@dataclass
+class ClusterClock:
+    """Simulated time accumulator (repair cost model) + real wall time."""
+    sim_seconds: float = 0.0
+
+    def charge(self, seconds: float) -> None:
+        self.sim_seconds += seconds

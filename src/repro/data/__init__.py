@@ -1,0 +1,13 @@
+from repro.data.pipeline import (
+    ShardAssignment,
+    global_batch_for_step,
+    make_batch,
+    shard_batch,
+)
+
+__all__ = [
+    "ShardAssignment",
+    "global_batch_for_step",
+    "make_batch",
+    "shard_batch",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Legio itself contributes no kernels (its contribution is the communicator/
+repair layer), but the models it schedules do: flash attention dominates the
+transformer cells and the SSD scan dominates mamba2/hymba. Each kernel ships
+as <name>.py (pl.pallas_call + BlockSpec), with ``ops.py`` as the jit'd
+public wrapper and ``ref.py`` as the pure-jnp oracle used by the tests.
+"""
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+__all__ = ["flash_attention_pallas", "ssd_scan_pallas"]

@@ -1,0 +1,173 @@
+"""Pallas TPU flash-attention kernel (causal / GQA / sliding-window / softcap).
+
+TPU-native formulation (not a CUDA port): the grid is
+``(batch, q_heads, q_blocks, kv_blocks)`` with the KV dimension innermost —
+TPU cores execute the grid sequentially, so the online-softmax accumulators
+live in VMEM scratch and persist across the KV sweep (re-initialized at
+``kv_index == 0``, written back at the last KV block). The MXU sees two
+``(block_q, head_dim) x (head_dim, block_k)``-shaped matmuls per step;
+block sizes default to (512, 1024) and must be multiples of 128 to align
+with the MXU systolic array. Softmax stats are kept as (block_q, 128)
+lane-replicated tiles — VMEM wants >=2D, (8,128)-aligned allocations.
+
+GQA is handled in the BlockSpec index maps: the KV block for query head
+``h`` is loaded from KV head ``h // (Hq // Hkv)`` — no KV replication in
+HBM, the re-use happens in VMEM.
+
+Fully-masked KV blocks (causal skip / outside the sliding window) are
+skipped with ``pl.when`` around the matmul body, so the causal wall-clock
+is ~half of the full sweep, matching the blocked-XLA path's static skip.
+
+VMEM budget per grid step (bf16 in, fp32 acc):
+  q (bq, hd) + k/v (bk, hd) + acc (bq, hd) f32 + m/l (bq, 128) f32
+  = 512*128*2 + 2*1024*128*2 + 512*128*4 + 2*512*128*4  ≈ 1.4 MB « 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(
+    # refs (post-BlockSpec): q (1,1,bq,hd); k,v (1,1,bk,hd); o (1,1,bq,hd)
+    q_ref, k_ref, v_ref, o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    q_start = qi * block_q + q_offset          # absolute first query position
+    k_start = kj * block_k
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- dead-block test: fully causal-masked or left of the window --------
+    q_last = q_start + block_q - 1
+    k_last = k_start + block_k - 1
+    masked_out_causal = causal and (k_start > q_last)
+    masked_out_window = window > 0 and (k_last <= q_start - window)
+    live = jnp.logical_not(
+        jnp.logical_or(masked_out_causal, masked_out_window))
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                              # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)         # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, hd)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-37)               # (bq, 1)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,              # (B, Sq, H, hd)
+    k: jax.Array,              # (B, Sk, K, hd)
+    v: jax.Array,              # (B, Sk, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, Sq, H, hd) attention output, dtype of q."""
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    assert H % Kh == 0, (H, Kh)
+    rep = H // Kh
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    n_q_blocks = Sq // block_q
+    n_kv_blocks = Sk // block_k
+
+    # kernel-internal layout: (B, H, S, hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, n_q_blocks, n_kv_blocks)
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        softcap=logit_softcap,
+        scale=1.0 / math.sqrt(hd),
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_kv_blocks,
+        q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

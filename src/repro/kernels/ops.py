@@ -1,0 +1,41 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs in Python op-by-op, which validates indexing, masking
+and the online-softmax/recurrence algebra exactly as the TPU grid would
+sequence them. On TPU backends the same call sites lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "q_offset",
+                     "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0, q_offset: int = 0,
+                    block_q: int = 512, block_k: int = 1024):
+    """(B,Sq,H,hd) x (B,Sk,K,hd)² -> (B,Sq,H,hd); GQA via BlockSpec reuse."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        q_offset=q_offset, block_q=min(block_q, q.shape[1]),
+        block_k=min(block_k, k.shape[1]), interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, initial_state=None):
+    """Chunked SSD scan; returns (y (B,S,H,P), final_state (B,H,P,N) f32)."""
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           initial_state=initial_state,
+                           interpret=_interpret())

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the single source of truth for kernel semantics:
+
+  * ``flash_attention_ref``  — naive O(S²) softmax attention with GQA,
+    causal/sliding-window masking, logit softcap and query offset;
+  * ``ssd_scan_ref``         — the chunked SSD recurrence in plain jnp.
+
+The model code uses the same implementations (``repro.models.attention`` /
+``repro.models.ssd``), so a kernel that matches its oracle also matches the
+XLA path the dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import mha_reference
+from repro.models.ssd import ssd_chunked_reference
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0, logit_softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    return mha_reference(q, k, v, causal=causal, window=window,
+                         logit_softcap=logit_softcap, q_offset=q_offset)
+
+
+def ssd_scan_ref(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    *, chunk: int = 256, initial_state: jax.Array | None = None,
+):
+    return ssd_chunked_reference(x, dt, A, Bm, Cm, chunk=chunk,
+                                 initial_state=initial_state)

@@ -1,0 +1,2 @@
+# Intentionally import-free: ``dryrun.py`` must set XLA_FLAGS before anything
+# in this package (or jax) is imported. Import submodules explicitly.

@@ -1,0 +1,30 @@
+"""Target-hardware constants (TPU v5e) for roofline analysis.
+
+The container is CPU-only; these numbers parameterize the roofline terms
+derived from compiled HLO (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: float         # HBM capacity per chip
+    vmem_bytes: float
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2 ** 20,
+)
+
+DEFAULT_CHIP = TPU_V5E

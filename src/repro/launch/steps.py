@@ -1,0 +1,221 @@
+"""Step functions + abstract input specs for the dry-run and launchers.
+
+Every (arch × shape) cell lowers exactly one of three step kinds:
+
+  train    -> ``train_step(params, opt, batch)``   (fwd + bwd + AdamW)
+  prefill  -> ``prefill_step(params, batch)``      (forward + cache build)
+  decode   -> ``serve_step(params, cache, tokens)`` (one token, KV cache of
+              seq_len — ``decode_*`` / ``long_*`` lower THIS, not train_step)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input (params
+and optimizer state included — the dry-run never allocates), keyed by the
+step function's keyword names, so ``jit(step).lower(**input_specs(...))``
+works directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, TrainConfig
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+)
+from repro.models import api
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Abstract state (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt(cfg: ModelConfig, params: PyTree | None = None) -> PyTree:
+    params = params if params is not None else abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    # batch/max_len are shape-defining -> must stay static under eval_shape
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model inputs for a train/prefill step (tokens/labels/embeds)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.is_encoder_decoder:
+        # stub audio frontend: precomputed frame embeddings
+        batch["embeds"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    elif cfg.frontend == "patch":
+        # stub patch frontend: precomputed early-fusion embeddings
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    params = abstract_params(cfg)
+    if shape.kind == "train":
+        return {
+            "params": params,
+            "opt": abstract_opt(cfg, params),
+            "batch": abstract_batch(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": params, "batch": abstract_batch(cfg, shape)}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "params": params,
+        "cache": abstract_cache(cfg, shape.global_batch, shape.seq_len),
+        "tokens": _sds((shape.global_batch, 1), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step functions (pure; jitted by the caller with explicit shardings)
+# ---------------------------------------------------------------------------
+
+def train_step_fn(cfg: ModelConfig, tc: TrainConfig | None = None) -> Callable:
+    tc = tc or TrainConfig()
+    lr_fn = cosine_schedule(tc)
+
+    def train_step(params, opt, batch):
+        def loss_fn(p):
+            return api.train_loss(cfg, p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        updates, opt = adamw_update(grads, opt, params, tc, lr_fn(opt.step))
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt, metrics
+
+    return train_step
+
+
+def prefill_step_fn(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        kw = {}
+        if "embeds" in _keys(cfg):
+            kw["embeds"] = batch["embeds"]
+        tokens = batch.get("tokens")
+        if tokens is None:
+            # patch-frontend prefill: positions come from embeds
+            B, S = batch["embeds"].shape[0], batch["embeds"].shape[1]
+            tokens = jnp.zeros((B, S), jnp.int32)
+        logits, cache = api.prefill(cfg, params, tokens, max_len, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def _keys(cfg: ModelConfig) -> tuple[str, ...]:
+    if cfg.is_encoder_decoder or cfg.frontend == "patch":
+        return ("embeds",)
+    return ()
+
+
+def serve_step_fn(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens)
+
+    return serve_step
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeSpec,
+                tc: TrainConfig | None = None) -> Callable:
+    if shape.kind == "train":
+        return train_step_fn(cfg, tc)
+    if shape.kind == "prefill":
+        return prefill_step_fn(cfg, shape.seq_len)
+    return serve_step_fn(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Shardings for jit(in_shardings=..., out_shardings=...)
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec_tree):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cell_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                   specs: dict) -> tuple[dict, Any]:
+    """(in_shardings dict keyed like input_specs, out_shardings) for a cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pspecs = param_specs(cfg, specs["params"], mesh)
+    p_shard = _named(mesh, pspecs)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        o = specs["opt"]
+        opt_shard = type(o)(
+            step=repl,
+            mu=_named(mesh, param_specs(cfg, o.mu, mesh)),
+            nu=_named(mesh, param_specs(cfg, o.nu, mesh)),
+        )
+        b_shard = _named(
+            mesh, batch_specs(cfg, mesh, specs["batch"], shape.global_batch))
+        in_sh = {"params": p_shard, "opt": opt_shard, "batch": b_shard}
+        # outputs: (params, opt, metrics) — ``repl`` is a pytree prefix that
+        # broadcasts over every (scalar) metric leaf.
+        out_sh = (p_shard, opt_shard, repl)
+        return in_sh, out_sh
+
+    if shape.kind == "prefill":
+        b_shard = _named(
+            mesh, batch_specs(cfg, mesh, specs["batch"], shape.global_batch))
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_shard = _named(
+            mesh, cache_specs(cfg, mesh, cache, shape.global_batch))
+        logits_sh = _logits_sharding(cfg, mesh, shape)
+        return {"params": p_shard, "batch": b_shard}, (logits_sh, c_shard)
+
+    # decode
+    c_shard = _named(
+        mesh, cache_specs(cfg, mesh, specs["cache"], shape.global_batch))
+    t_shard = _named(
+        mesh, batch_specs(cfg, mesh, {"tokens": specs["tokens"]},
+                          shape.global_batch))["tokens"]
+    logits_sh = _logits_sharding(cfg, mesh, shape)
+    return ({"params": p_shard, "cache": c_shard, "tokens": t_shard},
+            (logits_sh, c_shard))
+
+
+def _logits_sharding(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import _batch_dim_axes
+    b = _batch_dim_axes(mesh, shape.global_batch)
+    return NamedSharding(mesh, P(b, None, None))

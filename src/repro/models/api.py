@@ -1,0 +1,56 @@
+"""Family-dispatched model API.
+
+Every launcher / test / benchmark goes through these five functions:
+
+  init_params(cfg, key)                      -> params pytree
+  train_loss(cfg, params, batch)             -> (loss, metrics)
+  init_cache(cfg, batch, max_len)            -> decode cache pytree
+  prefill(cfg, params, tokens, max_len, ...) -> (last logits, cache)
+  decode_step(cfg, params, cache, tokens)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, mamba, transformer
+
+Params = dict[str, Any]
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "hybrid")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "ssm":
+        return mamba
+    if cfg.family == "encdec":
+        return encdec
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return _mod(cfg).init_params(cfg, key)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict):
+    return _mod(cfg).train_loss(cfg, params, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return _mod(cfg).init_cache(cfg, batch, max_len)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int, **kw):
+    return _mod(cfg).prefill(cfg, params, tokens, max_len, **kw)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict, tokens):
+    return _mod(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,233 @@
+"""Attention implementations.
+
+``blocked_attention`` is the production XLA path: a flash-attention-style
+online-softmax computed block-by-block (never materializes the full
+(Sq, Sk) score matrix). The Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same contract with the
+score blocks held in VMEM and is validated against ``mha_reference``;
+the blocked-jnp path is what the dry-run lowers (Pallas lowering is
+TPU-only; see DESIGN.md §6).
+
+Distribution: GQA is computed H-major — K/V are repeated to the full query
+head count and every (B, S, H, hd) tensor is constrained to head (='model')
+parallelism via ``shard_heads``. The repeat costs rep× KV HBM traffic but
+keeps every einsum batch-parallel over heads under GSPMD; without it the
+(D -> H*hd) reshape loses the sharding and the partitioner emits an
+all-reduce of the score blocks (measured: ~10x the collective bytes of the
+whole rest of the step). The Pallas kernel does NOT pay the repeat — its
+BlockSpec index map reuses one KV block per query-head group in VMEM.
+
+Causal block skipping: query blocks are unrolled (static python loop) so
+each gets a statically-bounded KV range — halves causal compute vs. the
+naive full sweep (``cfg.causal_block_skip``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_heads
+from repro.models.common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool, window: int) -> jax.Array:
+    """(Q, K) boolean mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def mha_reference(
+    q: jax.Array,             # (B, Sq, H, hd)
+    k: jax.Array,             # (B, Sk, K, hd)
+    v: jax.Array,             # (B, Sk, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Naive O(S^2)-memory oracle. Only for tests/small shapes."""
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    rep = H // Kh
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(hd))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Sq, Kh, rep, hd)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qf, kf)
+    scores = _softcap(scores, logit_softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, k_pos, causal=causal, window=window)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _kv_block_range(
+    q_start: int, q_len: int, k_len: int, block_k: int,
+    *, causal: bool, window: int, q_offset: int, skip: bool,
+) -> tuple[int, int]:
+    """Static [lo, hi) KV-block range a query block can attend to."""
+    n_blocks = (k_len + block_k - 1) // block_k
+    if not skip:
+        return 0, n_blocks
+    q_first = q_offset + q_start
+    q_last = q_offset + q_start + q_len - 1
+    hi = n_blocks if not causal else min(n_blocks, (q_last // block_k) + 1)
+    lo = 0
+    if window > 0:
+        lo = max(0, (q_first - window + 1) // block_k)
+    return lo, max(hi, lo + 1)
+
+
+def blocked_attention(
+    q: jax.Array,             # (B, Sq, H, hd)
+    k: jax.Array,             # (B, Sk, K, hd)
+    v: jax.Array,             # (B, Sk, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    block_skip: bool = True,
+    head_shard: str = "none",
+) -> jax.Array:
+    """Flash-attention (online softmax) in XLA ops; O(Sq·block_k) memory."""
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    rep = H // Kh
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # Pad to block multiples; padded keys are masked via ``k_pos < Sk``.
+    Sq_real, Sk_real = Sq, Sk
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        Sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        Sk += pad_k
+
+    # H-major GQA: repeat KV to the query head count (see module docstring).
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = shard_heads(q, head_shard)
+    k = shard_heads(k, head_shard)
+    v = shard_heads(v, head_shard)
+
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale                       # (B, Sq, H, hd)
+    k_pos_all = jnp.arange(Sk)
+
+    out_blocks = []
+    for qi in range(Sq // block_q):
+        q_start = qi * block_q
+        qb = jax.lax.dynamic_slice_in_dim(qf, q_start, block_q, axis=1)
+        q_pos = q_offset + q_start + jnp.arange(block_q)
+        lo, hi = _kv_block_range(
+            q_start, block_q, Sk, block_k,
+            causal=causal, window=window, q_offset=q_offset, skip=block_skip,
+        )
+
+        def kv_step(carry, j, qb=qb, q_pos=q_pos):
+            acc, m_prev, l_prev = carry
+            k_start = j * block_k
+            kb = jax.lax.dynamic_slice_in_dim(k, k_start, block_k, axis=1).astype(jnp.float32)
+            vb = jax.lax.dynamic_slice_in_dim(v, k_start, block_k, axis=1).astype(jnp.float32)
+            k_pos = jax.lax.dynamic_slice_in_dim(k_pos_all, k_start, block_k, axis=0)
+            s = jnp.einsum("bqhd,bshd->bhqs", qb, kb)        # (B, H, bq, bk)
+            s = _softcap(s, logit_softcap)
+            mask = (k_pos[None, :] <= q_pos[:, None]) if causal else jnp.ones((block_q, block_k), bool)
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            if pad_k:
+                mask &= (k_pos < Sk_real)[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)                      # (B, H, bq)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p, vb)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        (acc, m_fin, l_fin), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(lo, hi)
+        )
+        ob = acc / jnp.maximum(l_fin[..., None], 1e-37)      # (B, H, bq, hd)
+        out_blocks.append(jnp.transpose(ob, (0, 2, 1, 3)))   # (B, bq, H, hd)
+
+    out = jnp.concatenate(out_blocks, axis=1)
+    if pad_q:
+        out = out[:, :Sq_real]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,             # (B, 1, H, hd) — one new token
+    k_cache: jax.Array,       # (B, C, K, hd)
+    v_cache: jax.Array,       # (B, C, K, hd)
+    valid_mask: jax.Array,    # (B, C) bool — which cache slots hold real keys
+    *,
+    logit_softcap: float = 0.0,
+    head_shard: str = "none",
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    Unlike the training path this does NOT repeat KV to the query head count:
+    the cache is the dominant decode buffer (GiB-scale at 32k context) and a
+    rep-fold repeat would multiply it. Instead the grouped einsum keeps the
+    cache's (K, hd) layout and the cache is sharded over its *sequence* dim
+    ('model' axis, see dist.sharding.cache_specs) — scores come out C-sharded
+    and the softmax/value reductions contract over C, so the only collectives
+    are a tiny (B,K,rep) logsumexp combine and the (B,H,hd) output partial —
+    ring-attention decoding, chosen by GSPMD from the shardings.
+    """
+    B, _, H, hd = q.shape
+    Kh = k_cache.shape[2]
+    rep = H // Kh
+    qf = (q.astype(jnp.float32) * (1.0 / math.sqrt(hd))).reshape(B, Kh, rep, hd)
+    s = jnp.einsum("bkrd,bckd->bkrc", qf, k_cache.astype(jnp.float32))
+    s = _softcap(s, logit_softcap)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrc,bckd->bkrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention(q, k, v, cfg, *, causal=True, window=None, q_offset=0):
+    """Config-dispatched attention entry point used by the models."""
+    window = cfg.sliding_window if window is None else window
+    kwargs = dict(
+        causal=causal,
+        window=window,
+        logit_softcap=cfg.attn_logit_softcap,
+        q_offset=q_offset,
+    )
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k, **kwargs)
+    return blocked_attention(
+        q, k, v, block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        block_skip=cfg.causal_block_skip, head_shard=cfg.act_shard, **kwargs,
+    )

@@ -1,0 +1,248 @@
+"""Encoder-decoder transformer (whisper-style backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, D) — the conv mel frontend is not
+modeled. Positions are sinusoidal (computed on the fly, so decode length is
+not baked into parameters).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import gather_fsdp, shard_activations
+from repro.models.attention import attention, decode_attention
+from repro.models.common import (
+    activation_fn,
+    cross_entropy_chunked,
+    dense_init,
+    embed_init,
+    rms_norm,
+    sinusoidal_positions,
+    softcap,
+)
+
+Params = dict[str, Any]
+
+
+def _init_attn(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    return {
+        "wq": dense_init(ks[0], (D, cfg.q_dim), dtype),
+        "wk": dense_init(ks[1], (D, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (D, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, D), dtype),
+    }
+
+
+def _init_mlp(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": dense_init(ks[0], (D, F), dtype),
+        "w_out": dense_init(ks[1], (F, D), dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    D = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": jnp.zeros((D,), dtype), "attn": _init_attn(cfg, k1, dtype),
+            "mlp_norm": jnp.zeros((D,), dtype), "mlp": _init_mlp(cfg, k2, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn_norm": jnp.zeros((D,), dtype), "attn": _init_attn(cfg, k1, dtype),
+            "cross_norm": jnp.zeros((D,), dtype), "cross": _init_attn(cfg, k2, dtype),
+            "mlp_norm": jnp.zeros((D,), dtype), "mlp": _init_mlp(cfg, k3, dtype),
+        }
+
+    enc_keys = jax.random.split(keys[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "embed": embed_init(keys[2], (cfg.vocab_size, D), dtype),
+        "enc_layers": jax.tree.map(lambda *x: jnp.stack(x, 0), *[enc_layer(k) for k in enc_keys]),
+        "dec_layers": jax.tree.map(lambda *x: jnp.stack(x, 0), *[dec_layer(k) for k in dec_keys]),
+        "enc_norm": jnp.zeros((D,), dtype),
+        "final_norm": jnp.zeros((D,), dtype),
+    }
+
+
+def _self_attn(cfg, lp, h, *, causal):
+    B, S, _ = h.shape
+    q = (h @ lp["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    o = attention(q, k, v, cfg, causal=causal, window=0)
+    return o.reshape(B, S, cfg.q_dim) @ lp["wo"], k, v
+
+
+def _cross_attn(cfg, lp, h, enc_k, enc_v):
+    B, S, _ = h.shape
+    q = (h @ lp["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    o = attention(q, enc_k, enc_v, cfg, causal=False, window=0)
+    return o.reshape(B, S, cfg.q_dim) @ lp["wo"]
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed embeddings (stub frontend)."""
+    dtype = jnp.dtype(cfg.dtype)
+    S = frames.shape[1]
+    x = frames.astype(dtype) + sinusoidal_positions(S, cfg.d_model).astype(dtype)[None]
+
+    def body(carry, lp):
+        lp = gather_fsdp(lp, cfg.act_shard)
+        h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+        o, _, _ = _self_attn(cfg, lp["attn"], h, causal=False)
+        x2 = carry + o
+        h2 = rms_norm(x2, lp["mlp_norm"], cfg.norm_eps)
+        act = activation_fn(cfg.activation)
+        out = x2 + act(h2 @ lp["mlp"]["w_in"]) @ lp["mlp"]["w_out"]
+        return shard_activations(out, cfg.act_shard), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _enc_kv(cfg, dec_layers, enc_out):
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    B, Se, _ = enc_out.shape
+
+    def per_layer(_, lp):
+        k = (enc_out @ lp["cross"]["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ lp["cross"]["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        return None, (k, v)
+
+    _, (ek, ev) = jax.lax.scan(per_layer, None, dec_layers)
+    return ek, ev  # (L, B, Se, K, hd)
+
+
+def decode_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 enc_out: jax.Array, collect_kv: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(dtype)[None]
+
+    def body(carry, lp):
+        lp = gather_fsdp(lp, cfg.act_shard)
+        h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+        o, k, v = _self_attn(cfg, lp["attn"], h, causal=True)
+        x2 = carry + o
+        hc = rms_norm(x2, lp["cross_norm"], cfg.norm_eps)
+        Bq, Se, _ = enc_out.shape
+        ek = (enc_out @ lp["cross"]["wk"]).reshape(Bq, Se, cfg.n_kv_heads, cfg.head_dim)
+        ev = (enc_out @ lp["cross"]["wv"]).reshape(Bq, Se, cfg.n_kv_heads, cfg.head_dim)
+        x3 = x2 + _cross_attn(cfg, lp["cross"], hc, ek, ev)
+        h2 = rms_norm(x3, lp["mlp_norm"], cfg.norm_eps)
+        act = activation_fn(cfg.activation)
+        out = x3 + act(h2 @ lp["mlp"]["w_in"]) @ lp["mlp"]["w_out"]
+        return shard_activations(out, cfg.act_shard), (k, v) if collect_kv else None
+
+    fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, kv = jax.lax.scan(fn, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), kv
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: embeds (B,S_enc,D) stub audio frames, tokens/labels (B,S)."""
+    enc_out = encode(cfg, params, batch["embeds"])
+    hidden, _ = decode_train(cfg, params, batch["tokens"], enc_out)
+    loss, metrics = cross_entropy_chunked(
+        hidden, params["embed"], batch["labels"], chunk=cfg.xent_chunk,
+        z_loss_weight=cfg.z_loss_weight,
+    )
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    L = cfg.n_layers
+    dtype = jnp.dtype(cfg.dtype)
+    Se = cfg.encoder_seq_len
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cross_k": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cross_v": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, max_len: int,
+            *, embeds: jax.Array) -> tuple[jax.Array, dict]:
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, embeds)
+    hidden, kv = decode_train(cfg, params, tokens, enc_out, collect_kv=True)
+    k_all, v_all = kv
+    pad = max_len - S
+    padk = jnp.zeros((cfg.n_layers, B, pad, cfg.n_kv_heads, cfg.head_dim), k_all.dtype)
+    ck, cv = _enc_kv(cfg, params["dec_layers"], enc_out)
+    cache = {
+        "pos": jnp.asarray(S, jnp.int32),
+        "k": jnp.concatenate([k_all, padk], axis=2),
+        "v": jnp.concatenate([v_all, padk], axis=2),
+        "cross_k": ck, "cross_v": cv,
+    }
+    logits = hidden[:, -1:, :].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    # sinusoidal position embedding at (dynamic) position `pos`
+    half = cfg.d_model // 2
+    inv = jnp.exp(-math.log(10000.0) / max(half - 1, 1) * jnp.arange(half, dtype=jnp.float32))
+    ang = pos.astype(jnp.float32) * inv
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(dtype)
+
+    def body(carry, xs):
+        lp, lc = xs
+        C = lc["k"].shape[1]
+        h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+        q = (h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(lc["k"], k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(lc["v"], v, pos, axis=1)
+        valid = jnp.broadcast_to((jnp.arange(C) <= pos)[None, :], (B, C))
+        o = decode_attention(q, k_cache, v_cache, valid,
+                             head_shard=cfg.act_shard)
+        x2 = carry + o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
+        hc = rms_norm(x2, lp["cross_norm"], cfg.norm_eps)
+        qc = (hc @ lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        Se = lc["cross_k"].shape[1]
+        validc = jnp.ones((B, Se), bool)
+        oc = decode_attention(qc, lc["cross_k"], lc["cross_v"], validc,
+                              head_shard=cfg.act_shard)
+        x3 = x2 + oc.reshape(B, 1, cfg.q_dim) @ lp["cross"]["wo"]
+        h2 = rms_norm(x3, lp["mlp_norm"], cfg.norm_eps)
+        act = activation_fn(cfg.activation)
+        out = x3 + act(h2 @ lp["mlp"]["w_in"]) @ lp["mlp"]["w_out"]
+        return out, {"k": k_cache, "v": v_cache}
+
+    layer_caches = {k: cache[k] for k in ("k", "v", "cross_k", "cross_v")}
+    x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], layer_caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    new_cache = dict(cache)
+    new_cache["k"] = new_kv["k"]
+    new_cache["v"] = new_kv["v"]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

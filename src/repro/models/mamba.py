@@ -1,0 +1,104 @@
+"""Mamba-2 language model (attention-free, family='ssm')."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import gather_fsdp, shard_activations
+from repro.models import ssd as ssd_mod
+from repro.models.common import cross_entropy_chunked, embed_init, rms_norm
+
+Params = dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    def layer(k):
+        return {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "ssm": ssd_mod.init_ssm_params(cfg, k, dtype),
+        }
+
+    layers = jax.tree.map(lambda *x: jnp.stack(x, 0), *[layer(k) for k in layer_keys])
+    return {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   collect_state: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = shard_activations(x, cfg.act_shard)
+
+    def body(carry, lp):
+        lp = gather_fsdp(lp, cfg.act_shard)
+        h = rms_norm(carry, lp["norm"], cfg.norm_eps)
+        out, cache = ssd_mod.mamba_block(cfg, lp["ssm"], h)
+        return shard_activations(carry + out, cfg.act_shard), \
+            cache if collect_state else None
+
+    fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, caches = jax.lax.scan(fn, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), caches
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"])
+    loss, metrics = cross_entropy_chunked(
+        hidden, params["embed"], batch["labels"], chunk=cfg.xent_chunk,
+        z_loss_weight=cfg.z_loss_weight,
+    )
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    del max_len  # SSM state is O(1) in sequence length
+    L = cfg.n_layers
+    di, H, P, N, G = ssd_mod.ssm_dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "conv": jnp.zeros((L, batch, cfg.conv_kernel - 1, di + 2 * G * N), dtype),
+        "state": jnp.zeros((L, batch, H, P, N), jnp.float32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, max_len: int,
+            **_) -> tuple[jax.Array, dict]:
+    hidden, caches = forward_hidden(cfg, params, tokens, collect_state=True)
+    cache = {
+        "pos": jnp.asarray(tokens.shape[1], jnp.int32),
+        "conv": caches.conv,
+        "state": caches.state,
+    }
+    logits = hidden[:, -1:, :].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+    def body(carry, xs):
+        lp, conv, state = xs
+        h = rms_norm(carry, lp["norm"], cfg.norm_eps)
+        out, new_cache = ssd_mod.mamba_decode_step(
+            cfg, lp["ssm"], h, ssd_mod.SSMCache(conv=conv, state=state))
+        return carry + out, (new_cache.conv, new_cache.state)
+
+    x, (new_conv, new_state) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, {"pos": cache["pos"] + 1, "conv": new_conv, "state": new_state}

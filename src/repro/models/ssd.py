@@ -1,0 +1,259 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked parallel form.
+
+The sequence is split into chunks of length Q. Within a chunk the SSD is
+computed in its "attention-like" quadratic form; across chunks a linear
+recurrence carries the (H, P, N) state. This is the exact algorithm of
+arXiv:2405.21060 §6 and is what the Pallas kernel
+(``repro.kernels.ssd_scan``) implements per (batch, head) block; this module
+is the XLA-native version used by the models and the dry-run.
+
+Shapes: x (B,S,H,P) inputs, dt (B,S,H) timesteps (post-softplus), A (H,)
+negative decay rates, B/C (B,S,G,N) input/output projections (G groups
+broadcast over heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_heads
+from repro.models.common import dense_init, rms_norm
+
+
+def segsum(la: jax.Array) -> jax.Array:
+    """la: (..., Q) log-decays -> (..., Q, Q) lower-triangular cumulative sums.
+
+    out[..., i, j] = sum_{m=j+1..i} la[..., m]   (for j <= i; -inf above diag)
+    """
+    Q = la.shape[-1]
+    cum = jnp.cumsum(la, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_reference(
+    x: jax.Array,   # (B,S,H,P)
+    dt: jax.Array,  # (B,S,H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B,S,G,N)
+    Cm: jax.Array,  # (B,S,G,N)
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B,H,P,N)
+    head_shard: str = "none",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 math."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    n_chunks = S // Q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    # chunked views: (B, n, Q, ...)
+    xc = xf.reshape(B_, n_chunks, Q, H, P)
+    dtc = dtf.reshape(B_, n_chunks, Q, H)
+    Bc = Bf.reshape(B_, n_chunks, Q, G, N)
+    Cc = Cf.reshape(B_, n_chunks, Q, G, N)
+    lac = dtc * Af[None, None, None, :]          # (B,n,Q,H) log decays
+    head_group = jnp.arange(H) // rep            # map head -> group
+
+    Bh = Bc[:, :, :, head_group, :]              # (B,n,Q,H,N)
+    Ch = Cc[:, :, :, head_group, :]
+    # every intra-chunk einsum batches over (B, n, H): pin H to the model
+    # axis (GSPMD pads 50 -> 64 on hymba) — without this Shardy partial-sums
+    # the (B,n,H,Q,Q) score tensor and all-reduces ~200 GB/step (§Perf it.5)
+    xc = shard_heads(xc, head_shard, head_axis=3)
+    dtc = shard_heads(dtc, head_shard, head_axis=3)
+    lac = shard_heads(lac, head_shard, head_axis=3)
+    Bh = shard_heads(Bh, head_shard, head_axis=3)
+    Ch = shard_heads(Ch, head_shard, head_axis=3)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    ss = segsum(lac.transpose(0, 1, 3, 2))       # (B,n,H,Q,Q)
+    L = jnp.exp(ss)
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", Ch, Bh)            # (B,n,H,Q,Q)
+    y_intra = jnp.einsum("bnhij,bnhij,bnjh,bnjhp->bnihp",
+                         scores, L, dtc, xc)
+
+    # --- chunk summary states ---
+    cum = jnp.cumsum(lac, axis=2)                                # (B,n,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,n,Q,H)
+    states = jnp.einsum("bnjh,bnjh,bnjhs,bnjhp->bnhps",
+                        decay_to_end, dtc, Bh, xc)               # (B,n,H,P,N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,n,H)
+    if initial_state is None:
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def scan_body(h_prev, inp):
+        s_c, dec = inp                                           # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                   # (n,B,H,P,N)
+    decay_t = chunk_decay.transpose(1, 0, 2)                     # (n,B,H)
+    h_final, h_prevs = jax.lax.scan(scan_body, h0, (states_t, decay_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                   # (B,n,H,P,N)
+
+    # inter-chunk contribution: C_i · h_prev, decayed to position i
+    in_decay = jnp.exp(cum)                                      # (B,n,Q,H)
+    y_inter = jnp.einsum("bnihs,bnhps,bnih->bnihp", Ch, h_prevs, in_decay)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,    # (B,H,P)
+    dt: jax.Array,   # (B,H)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B,G,N)
+    Cm: jax.Array,   # (B,G,N)
+    state: jax.Array,  # (B,H,P,N) fp32
+) -> tuple[jax.Array, jax.Array]:
+    """One recurrent step: h = h*exp(dt*A) + dt*B⊗x ; y = C·h."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    head_group = jnp.arange(H) // rep
+    Bh = Bm[:, head_group, :].astype(jnp.float32)   # (B,H,N)
+    Ch = Cm[:, head_group, :].astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32))      # (B,H)
+    xf = x.astype(jnp.float32)
+    new_state = state * dec[..., None, None] + \
+        dtf[..., None, None] * xf[..., :, None] * Bh[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ----------------------------------------------------------------------------
+# Full Mamba-2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ----------------------------------------------------------------------------
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, K-1, conv_ch) rolling conv inputs
+    state: jax.Array   # (B, H, P, N) fp32 SSD state
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    di = cfg.d_inner
+    H = cfg.ssm_nheads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    return di, H, P, N, G
+
+
+def init_ssm_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    di, H, P, N, G = ssm_dims(cfg)
+    D = cfg.d_model
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * G * N + H   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (D, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "ssd_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, D), dtype),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, H, P, N, G = ssm_dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B,S,C), w: (K,C). history: (B,K-1,C)."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([history, xbc], axis=1)              # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                initial: SSMCache | None = None) -> tuple[jax.Array, SSMCache]:
+    """x: (B,S,D) -> (B,S,D). Returns output + final cache (for decode handoff)."""
+    B_, S, D = x.shape
+    di, H, P, N, G = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    hist = initial.conv if initial is not None else None
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], hist)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+
+    init_state = initial.state if initial is not None else None
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        y, h_final = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                   initial_state=init_state)
+    else:
+        y, h_final = ssd_chunked_reference(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                           initial_state=init_state,
+                                           head_shard=cfg.act_shard)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["ssd_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    K = cfg.conv_kernel
+    if S >= K - 1:
+        conv_tail = xbc_raw[:, S - (K - 1):, :]
+    else:
+        prev = hist if hist is not None else jnp.zeros((B_, K - 1, xbc_raw.shape[-1]), x.dtype)
+        conv_tail = jnp.concatenate([prev, xbc_raw], axis=1)[:, -(K - 1):, :]
+    return out, SSMCache(conv=conv_tail, state=h_final)
+
+
+def mamba_decode_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                      cache: SSMCache) -> tuple[jax.Array, SSMCache]:
+    """x: (B,1,D) one token. Returns (out (B,1,D), new cache)."""
+    B_, _, D = x.shape
+    di, H, P, N, G = ssm_dims(cfg)
+    zxbcdt = x[:, 0, :] @ p["in_proj"]                       # (B, proj)
+    z, xbc_new, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    K = cfg.conv_kernel
+    window = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)  # (B,K,C)
+    xbc = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B_, H, P)
+    Bm = Bm.reshape(B_, G, N)
+    Cm = Cm.reshape(B_, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_step(xs, dt, A, Bm, Cm, cache.state)
+    y = y + xs * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B_, di)
+    y = rms_norm(y * jax.nn.silu(z), p["ssd_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = SSMCache(conv=window[:, 1:, :], state=new_state)
+    return out, new_cache

@@ -1,0 +1,31 @@
+from repro.optim.adamw import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.compression import (
+    decompress_int8,
+    compress_int8,
+    compress_topk,
+    decompress_topk,
+    make_compressor,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "apply_updates",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "compress_int8",
+    "decompress_int8",
+    "compress_topk",
+    "decompress_topk",
+    "make_compressor",
+]

@@ -1,0 +1,98 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX.
+
+Written against pytrees directly (no optax dependency in this container).
+Moments are stored in ``state_dtype`` (fp32 default; grok-314B's config may
+select bf16 ``v`` to fit HBM — see EXPERIMENTS.md §Dry-run).
+
+The update is written to be GSPMD-friendly: every per-leaf op is elementwise,
+so optimizer state inherits the parameter sharding and the update adds zero
+collectives (only the global-norm clip contributes one scalar all-reduce,
+fused by XLA with the gradient reduction).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array   # () int32
+    mu: PyTree        # first moment
+    nu: PyTree        # second moment
+
+
+def adamw_init(params: PyTree, *, state_dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_schedule(tc: TrainConfig):
+    """lr(step): linear warmup -> cosine decay to 10% of peak."""
+
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = tc.learning_rate * s / max(tc.warmup_steps, 1)
+        prog = jnp.clip((s - tc.warmup_steps) / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+        cos = tc.learning_rate * (0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < tc.warmup_steps, warm, cos)
+
+    return lr
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: PyTree,
+    state: OptState,
+    params: PyTree,
+    tc: TrainConfig,
+    lr: jax.Array,
+) -> tuple[PyTree, OptState]:
+    """Returns (updates, new_state); apply with ``apply_updates``."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+
+    def per_leaf(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = tc.beta1 * m.astype(jnp.float32) + (1.0 - tc.beta1) * gf
+        v_new = tc.beta2 * v.astype(jnp.float32) + (1.0 - tc.beta2) * jnp.square(gf)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        upd = m_hat / (jnp.sqrt(v_hat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (-lr * upd).astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    out = [per_leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    updates = treedef.unflatten([o[0] for o in out])
+    mu = treedef.unflatten([o[1] for o in out])
+    nu = treedef.unflatten([o[2] for o in out])
+    return updates, OptState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,123 @@
+"""Gradient compression for cross-legion reduction (beyond-paper feature).
+
+Legio's hierarchical topology makes the cross-legion (master-to-master)
+all-reduce the long-haul hop — on a multi-pod TPU deployment it crosses DCI
+links an order of magnitude slower than intra-pod ICI. Both schemes here are
+error-feedback compressors: the compression residual is carried to the next
+step so the compressed-SGD iterates stay within O(1) of the exact ones
+(Karimireddy et al. 2019).
+
+  int8  : per-tensor absmax scaling, 4x (bf16) / 2x (int16-free) volume cut.
+  topk  : keep the top-k fraction of |g| entries (flattened), send values +
+          int32 indices; volume ~ 2 * k * |g|.
+
+Both are pure-JAX and shard-transparent: applied leaf-wise before the
+cross-legion reduce, decompressed after.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Int8Grad(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # () fp32 absmax / 127
+
+
+class TopKGrad(NamedTuple):
+    values: jax.Array   # (k,) fp32
+    indices: jax.Array  # (k,) int32
+    size: int           # original flattened size (static)
+
+
+def compress_int8(g: jax.Array) -> Int8Grad:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return Int8Grad(q=q, scale=scale)
+
+
+def decompress_int8(c: Int8Grad, dtype=jnp.float32) -> jax.Array:
+    return (c.q.astype(jnp.float32) * c.scale).astype(dtype)
+
+
+def compress_topk(g: jax.Array, fraction: float) -> TopKGrad:
+    flat = g.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.size * fraction))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return TopKGrad(values=flat[idx], indices=idx.astype(jnp.int32), size=flat.size)
+
+
+def decompress_topk(c: TopKGrad, shape, dtype=jnp.float32) -> jax.Array:
+    out = jnp.zeros((c.size,), jnp.float32).at[c.indices].set(c.values)
+    return out.reshape(shape).astype(dtype)
+
+
+def compressed_bytes(g: jax.Array, scheme: str, fraction: float = 0.05) -> int:
+    """Wire bytes after compression (used by the collective roofline model)."""
+    n = g.size
+    if scheme == "int8":
+        return n + 4
+    if scheme == "topk":
+        k = max(1, int(n * fraction))
+        return 8 * k
+    return n * g.dtype.itemsize
+
+
+def make_compressor(scheme: str, fraction: float = 0.05):
+    """Returns (compress_tree, decompress_tree) closing over error feedback.
+
+    compress(grads, residual) -> (payload, new_residual)
+    decompress(payload, template) -> grads
+    """
+    if scheme == "none":
+        def comp(grads, residual):
+            return grads, residual
+        def decomp(payload, template):
+            return payload
+        return comp, decomp
+
+    if scheme == "int8":
+        def comp(grads, residual):
+            def one(g, r):
+                gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+                c = compress_int8(gf)
+                return c, gf - decompress_int8(c)
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_r = jax.tree.leaves(residual) if residual is not None else [None] * len(flat_g)
+            pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+            return tdef.unflatten([p[0] for p in pairs]), tdef.unflatten([p[1] for p in pairs])
+
+        def decomp(payload, template):
+            return jax.tree.map(
+                lambda c, t: decompress_int8(c, t.dtype),
+                payload, template,
+                is_leaf=lambda x: isinstance(x, Int8Grad),
+            )
+        return comp, decomp
+
+    if scheme == "topk":
+        def comp(grads, residual):
+            def one(g, r):
+                gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+                c = compress_topk(gf, fraction)
+                return c, gf - decompress_topk(c, g.shape)
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_r = jax.tree.leaves(residual) if residual is not None else [None] * len(flat_g)
+            pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+            return tdef.unflatten([p[0] for p in pairs]), tdef.unflatten([p[1] for p in pairs])
+
+        def decomp(payload, template):
+            return jax.tree.map(
+                lambda c, t: decompress_topk(c, t.shape, t.dtype),
+                payload, template,
+                is_leaf=lambda x: isinstance(x, TopKGrad),
+            )
+        return comp, decomp
+
+    raise ValueError(f"unknown compression scheme {scheme!r}")

@@ -1,0 +1,56 @@
+"""DROP / REBALANCE shard reassignment (paper §IV rank-translation analogue)."""
+from hypothesis import given, strategies as st
+
+from repro.core.batch import gradient_scale, initial_assignment, reassign
+
+
+@given(n=st.integers(1, 64), spn=st.integers(1, 4))
+def test_initial_assignment_covers_all(n, spn):
+    plan = initial_assignment(list(range(n)), spn)
+    shards = [s for a in plan.assignments for s in a.shards]
+    assert sorted(shards) == list(range(n * spn))
+    assert plan.active_shards == n * spn
+
+
+@given(n=st.integers(2, 48), spn=st.integers(1, 3), data=st.data())
+def test_drop_conservation(n, spn, data):
+    plan = initial_assignment(list(range(n)), spn)
+    failed = set(data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                    max_size=n - 1, unique=True)))
+    dropped = reassign(plan, failed, "drop")
+    live_shards = [s for a in dropped.assignments for s in a.shards]
+    # survivors keep exactly their own shards
+    assert all(a.node not in failed for a in dropped.assignments)
+    assert len(live_shards) + len(dropped.dropped_shards) == n * spn
+    assert set(live_shards).isdisjoint(dropped.dropped_shards)
+
+
+@given(n=st.integers(2, 48), spn=st.integers(1, 3), data=st.data())
+def test_rebalance_conservation(n, spn, data):
+    plan = initial_assignment(list(range(n)), spn)
+    failed = set(data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                    max_size=n - 1, unique=True)))
+    reb = reassign(plan, failed, "rebalance")
+    shards = sorted(s for a in reb.assignments for s in a.shards)
+    assert shards == list(range(n * spn))       # nothing lost, no dupes
+    assert reb.dropped_shards == ()
+    # balance: max-min spread <= 1 after round-robin over equal buckets
+    sizes = [len(a.shards) for a in reb.assignments]
+    assert max(sizes) - min(sizes) <= max(1, spn)
+
+
+def test_sequential_failures_accumulate():
+    plan = initial_assignment(list(range(4)), 1)
+    plan = reassign(plan, {0}, "drop")
+    plan = reassign(plan, {1}, "drop")
+    assert plan.dropped_shards == (0, 1)
+    assert plan.active_shards == 2
+
+
+def test_gradient_scale():
+    plan = initial_assignment(list(range(4)), 2)
+    assert gradient_scale(plan, 8) == 1.0
+    dropped = reassign(plan, {0, 1}, "drop")
+    assert gradient_scale(dropped, 8) == 2.0    # 8 / 4 surviving shards
+    rebal = reassign(plan, {0, 1}, "rebalance")
+    assert gradient_scale(rebal, 8) == 1.0      # exact batch preserved

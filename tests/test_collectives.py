@@ -1,0 +1,91 @@
+"""Hierarchical collective schedules (paper §V / Fig. 4) and timing model."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.collectives import (
+    HierarchicalCollectives,
+    LinkModel,
+    agreement_time,
+    flat_collective_time,
+)
+from repro.core.hierarchy import LegionTopology
+
+
+def topo16():
+    return LegionTopology.build(list(range(16)), 4)
+
+
+def test_bcast_delivers_to_all():
+    coll = HierarchicalCollectives(topo16())
+    payload = np.arange(8, dtype=np.float32)
+    res = coll.bcast(5, payload)
+    for n in range(16):
+        np.testing.assert_array_equal(res.data[n], payload)
+    # schedule: root's local first, then global, then others (Fig. 4)
+    comms = [s[0] for s in res.stages]
+    assert comms[0] == "local_1" and comms[1] == "global"
+    assert set(comms[2:]) == {"local_0", "local_2", "local_3"}
+
+
+def test_reduce_collects_full_sum():
+    topo = topo16()
+    coll = HierarchicalCollectives(topo)
+    contributions = {n: np.full(4, float(n)) for n in topo.nodes}
+    res = coll.reduce(9, contributions)
+    np.testing.assert_array_equal(res.data[9], np.full(4, float(sum(range(16)))))
+    # non-master root costs one extra intra hop
+    assert res.stages[-1][0] == "local_2"
+
+
+def test_allreduce_equals_reduce_plus_bcast():
+    topo = topo16()
+    coll = HierarchicalCollectives(topo)
+    contributions = {n: np.ones(4) for n in topo.nodes}
+    res = coll.allreduce(contributions)
+    for n in topo.nodes:
+        np.testing.assert_array_equal(res.data[n], np.full(4, 16.0))
+
+
+def test_barrier_touches_everyone():
+    res = HierarchicalCollectives(topo16()).barrier()
+    assert res.sim_seconds > 0
+
+
+@given(n=st.integers(13, 512), nbytes=st.sampled_from([64, 4096, 1 << 20]))
+def test_hierarchy_confines_cross_traffic(n, nbytes):
+    """Only the global_comm stage rides slow links: hierarchical bcast beats
+    the flat tree whenever the cross/intra gap is wide (the paper's premise)."""
+    topo = LegionTopology.build(list(range(n)),
+                                max(2, round((2 * n) ** (1 / 3))))
+    link = LinkModel()
+    coll = HierarchicalCollectives(topo, link)
+    res = coll.bcast(0, np.zeros(nbytes // 8, np.float64))
+    flat = flat_collective_time(link, "one_to_all", n, nbytes)
+    assert res.sim_seconds < flat
+
+
+def test_file_ops_are_legion_local():
+    topo = topo16()
+    coll = HierarchicalCollectives(topo)
+    res = coll.file_op(6, 1 << 20)
+    assert res.stages[0][0] == "local_1"
+    assert res.stages[0][1] == 4                # only the legion participates
+
+
+def test_comm_creator_needs_world():
+    topo = topo16()
+    res = HierarchicalCollectives(topo).comm_create()
+    assert res.stages[0][0] == "world"
+    assert res.stages[0][1] == 16
+
+
+def test_agreement_overhead_small():
+    link = LinkModel()
+    # the BNP agreement is a zero-byte allreduce — microseconds, not payload
+    assert agreement_time(link, 256) < 1e-3
+
+
+def test_local_op_free():
+    res = HierarchicalCollectives(topo16()).local_op(3)
+    assert res.sim_seconds == 0.0

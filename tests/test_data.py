@@ -1,0 +1,65 @@
+"""Counter-based data pipeline: restart-exactness properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.data.pipeline import global_batch_for_step, make_batch
+
+
+@given(seed=st.integers(0, 2**20), step=st.integers(0, 1000),
+       shard=st.integers(0, 64))
+def test_determinism(seed, step, shard):
+    a = make_batch(seed, step, shard, batch=2, seq_len=16, vocab_size=97)
+    b = make_batch(seed, step, shard, batch=2, seq_len=16, vocab_size=97)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_shards_differ():
+    a = make_batch(0, 0, 0, batch=2, seq_len=32, vocab_size=97)
+    b = make_batch(0, 0, 1, batch=2, seq_len=32, vocab_size=97)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_steps_differ():
+    a = make_batch(0, 0, 0, batch=2, seq_len=32, vocab_size=97)
+    b = make_batch(0, 1, 0, batch=2, seq_len=32, vocab_size=97)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+@given(seed=st.integers(0, 100), step=st.integers(0, 50))
+def test_next_token_alignment(seed, step):
+    b = make_batch(seed, step, 0, batch=2, seq_len=24, vocab_size=53)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1]))
+
+
+def test_tokens_in_vocab():
+    b = make_batch(3, 7, 2, batch=4, seq_len=64, vocab_size=31)
+    assert int(jnp.max(b["tokens"])) < 31
+    assert int(jnp.min(b["tokens"])) >= 0
+
+
+def test_global_batch_is_shard_concat():
+    g = global_batch_for_step(0, 5, global_batch=8, seq_len=16,
+                              vocab_size=97, n_shards=4)
+    s1 = make_batch(0, 5, 1, batch=2, seq_len=16, vocab_size=97)
+    np.testing.assert_array_equal(
+        np.asarray(g["tokens"][2:4]), np.asarray(s1["tokens"]))
+
+
+def test_structure_is_learnable():
+    """The Markov stream must beat uniform entropy — a bigram table predicts
+    most transitions (this is what makes example losses decrease)."""
+    b = make_batch(0, 0, 0, batch=8, seq_len=256, vocab_size=64)
+    toks = np.asarray(b["tokens"])
+    # count repeated (prev -> next) transitions
+    trans = {}
+    for row in toks:
+        for a, c in zip(row[:-1], row[1:]):
+            trans.setdefault(int(a), []).append(int(c))
+    agree = sum(max(np.bincount(v).max(), 0) for v in trans.values())
+    total = sum(len(v) for v in trans.values())
+    # the (a, b) affine params vary per sequence, so a global bigram table
+    # is an underestimate of the structure — still far above uniform (1/64)
+    assert agree / total > 0.15

@@ -1,0 +1,93 @@
+"""Failure-detection semantics: heartbeats, noticing (P.2/P.3), stragglers."""
+from hypothesis import given, strategies as st
+
+from repro.core.detector import (
+    FaultInjector,
+    HeartbeatDetector,
+    StragglerDetector,
+    _bcast_children,
+    notice_fault,
+)
+from repro.core.types import NodeState
+
+
+def test_heartbeat_lifecycle():
+    d = HeartbeatDetector(timeout=5.0)
+    d.register(0)
+    d.register(1)
+    d.beat(0, 3.0)
+    assert d.sweep(4.0) == []
+    assert d.sweep(7.0) == [1]                 # 1 never beat past t=0
+    assert d.states[1] == NodeState.SUSPECT
+    d.beat(1, 7.5)                             # false suspicion cleared
+    assert d.states[1] == NodeState.HEALTHY
+    d.confirm_failed(1)
+    d.beat(1, 100.0)                           # failed nodes never return
+    assert d.states[1] == NodeState.FAILED
+
+
+@given(size=st.integers(1, 64))
+def test_bcast_tree_spans_all(size):
+    """The binomial tree from the root reaches every rank exactly once."""
+    seen, frontier = {0}, [0]
+    while frontier:
+        v = frontier.pop()
+        for c in _bcast_children(v, size):
+            assert c not in seen
+            seen.add(c)
+            frontier.append(c)
+    assert seen == set(range(size))
+
+
+@given(size=st.integers(2, 48), data=st.data())
+def test_bcast_notice_properties(size, data):
+    """BNP: noticers = live parents of dead children + unreached survivors."""
+    participants = list(range(size))
+    n_failed = data.draw(st.integers(1, max(1, size // 3)))
+    failed = set(data.draw(st.permutations(participants))[:n_failed])
+    root = data.draw(st.sampled_from(participants))
+    noticers = notice_fault("bcast", participants, failed, root=root)
+    assert noticers.isdisjoint(failed)          # dead ranks notice nothing
+    assert noticers <= set(participants)
+    if root in failed:
+        # root dead -> every survivor is unreached -> everyone notices
+        assert noticers == set(participants) - failed
+
+
+@given(size=st.integers(2, 48), data=st.data())
+def test_bcast_partial_notice_is_real(size, data):
+    """With a leaf failure, *only* its parent notices — the BNP itself."""
+    participants = list(range(size))
+    # pick a leaf of the rank-0-rooted tree: a node with no children
+    leaves = [v for v in range(size) if not _bcast_children(v, size)]
+    victim = data.draw(st.sampled_from(leaves))
+    if victim == 0:
+        return
+    noticers = notice_fault("bcast", participants, {victim}, root=0)
+    assert len(noticers) == 1                   # exactly the parent
+
+
+def test_global_ops_notice_everywhere():
+    participants = list(range(16))
+    for op in ("reduce", "allreduce", "barrier", "agree"):
+        assert notice_fault(op, participants, {3}) == set(range(16)) - {3}
+    assert notice_fault("local", participants, {3}) == set()
+    assert notice_fault("bcast", participants, set()) == set()
+
+
+def test_straggler_detection():
+    s = StragglerDetector(threshold=3.0, min_latency=0.01, min_samples=2)
+    for step in range(4):
+        for n in range(4):
+            s.observe(n, 0.02)
+        s.observe(4, 0.5)                       # 25x median
+    assert s.stragglers() == [4]
+    s.drop(4)
+    assert s.stragglers() == []
+
+
+def test_fault_injector_schedule():
+    inj = FaultInjector.at([(3, 1), (3, 2), (7, 0)])
+    assert [e.node for e in inj.due(3)] == [1, 2]
+    assert [e.node for e in inj.due(7)] == [0]
+    assert inj.due(4) == []

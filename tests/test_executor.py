@@ -1,0 +1,120 @@
+"""LegioExecutor end-to-end: transparent detect → agree → repair → continue."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultInjector,
+    LegioExecutor,
+    LegioPolicy,
+    RootFailedError,
+    VirtualCluster,
+)
+
+
+def work(node, shard, step):
+    return np.ones(4) * (shard + 1)
+
+
+def test_fault_free_run():
+    cl = VirtualCluster(16, policy=LegioPolicy(legion_size=4))
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(3)
+    for r in reports:
+        assert r.failed_now == ()
+        assert r.reduced[0] == sum(range(1, 17))
+
+
+def test_worker_fault_discard_and_continue():
+    inj = FaultInjector.at([(2, 5)])
+    cl = VirtualCluster(16, policy=LegioPolicy(legion_size=4), injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(5)
+    assert reports[2].failed_now == (5,)
+    assert reports[2].repair is not None
+    assert not reports[2].repair.master_failed
+    # after repair the reduce covers survivors only (shard 6 dropped)
+    assert reports[3].reduced[0] == sum(range(1, 17)) - 6
+    assert len(cl.live_nodes) == 15
+    # application-visible: reports keep coming, no exception — transparency
+
+
+def test_master_fault_repair():
+    inj = FaultInjector.at([(1, 0)])               # node 0: master of legion 0
+    cl = VirtualCluster(16, policy=LegioPolicy(legion_size=4), injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(3)
+    rep = reports[1].repair
+    assert rep is not None and rep.master_failed and rep.hierarchical
+    ops = [s.op for s in rep.steps]
+    assert "promote" in ops and "include" in ops
+    assert cl.topo.legion_of(1).master == 1        # re-elected
+
+
+def test_root_policy_stop():
+    inj = FaultInjector.at([(1, 0)])
+    cl = VirtualCluster(
+        8, policy=LegioPolicy(root_failure_policy="stop"), injector=inj)
+    ex = LegioExecutor(cl, work, final_collective="reduce", root=0)
+    ex.run_step()
+    with pytest.raises(RootFailedError):
+        ex.run_step()
+
+
+def test_root_policy_ignore_skips_op():
+    inj = FaultInjector.at([(1, 0)])
+    cl = VirtualCluster(
+        8, policy=LegioPolicy(root_failure_policy="ignore"), injector=inj)
+    ex = LegioExecutor(cl, work, final_collective="reduce", root=0)
+    ex.run_step()
+    r = ex.run_step()
+    assert r.skipped_op                             # op skipped, no crash
+    r = ex.run_step()
+    assert not r.skipped_op                         # next step proceeds
+
+
+def test_rebalance_preserves_total():
+    inj = FaultInjector.at([(1, 3)])
+    cl = VirtualCluster(8, policy=LegioPolicy(batch_policy="rebalance"),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(3)
+    # shard 3's work re-appears on a survivor: total unchanged
+    assert reports[2].reduced[0] == sum(range(1, 9))
+    assert reports[2].grad_scale == 1.0
+
+
+def test_drop_renormalizes():
+    inj = FaultInjector.at([(1, 3)])
+    cl = VirtualCluster(8, policy=LegioPolicy(batch_policy="drop"),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(3)
+    assert reports[2].reduced[0] == sum(range(1, 9)) - 4
+    assert reports[2].grad_scale == pytest.approx(8 / 7)
+
+
+def test_elastic_regrow_with_spares():
+    inj = FaultInjector.at([(1, 2)])
+    cl = VirtualCluster(8, policy=LegioPolicy(spare_nodes=2), injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(3)
+    # the spare (node 8) joined and took over the dropped shard
+    assert 8 in cl.topo.nodes
+    assert cl.plan.active_shards == 8
+
+
+def test_cascading_failures_to_minimum():
+    pairs = [(i, i) for i in range(6)]
+    cl = VirtualCluster(8, injector=FaultInjector.at(pairs))
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(7)
+    assert len(cl.live_nodes) == 2
+    assert reports[-1].reduced is not None          # still producing results
+
+
+def test_simulated_clock_charges_repairs():
+    inj = FaultInjector.at([(0, 1)])
+    cl = VirtualCluster(16, injector=inj)
+    LegioExecutor(cl, work).run(1)
+    assert cl.clock.sim_seconds > 0
+    assert cl.repairs[0].model_cost > 0

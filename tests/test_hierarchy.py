@@ -1,0 +1,120 @@
+"""Property tests for the legion topology (paper §V claims (a)/(b)/(c))."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.hierarchy import LegionTopology, make_topology
+from repro.core.policy import LegioPolicy
+
+nodes_st = st.integers(min_value=1, max_value=200)
+k_st = st.integers(min_value=1, max_value=24)
+
+
+@given(n=nodes_st, k=k_st)
+def test_build_partitions_nodes(n, k):
+    topo = LegionTopology.build(list(range(n)), k)
+    seen = [m for lg in topo.legions for m in lg.members]
+    assert sorted(seen) == list(range(n))          # disjoint + complete
+    assert all(len(lg) <= k for lg in topo.legions)
+    # paper: node r -> legion r // k
+    for lg in topo.legions:
+        for m in lg.members:
+            assert m // k == lg.index
+
+
+@given(n=nodes_st, k=k_st)
+def test_linear_communicator_count(n, k):
+    """Property (a): #communicators scales linearly with #nodes."""
+    topo = LegionTopology.build(list(range(n)), k)
+    n_comms = topo.n_communicators()
+    n_legions = (n + k - 1) // k
+    assert n_comms == 2 * n_legions + 2
+    assert n_comms <= 2 * n + 2
+
+
+@given(n=st.integers(2, 80), k=st.integers(1, 12),
+       data=st.data())
+def test_unique_master_path(n, k, data):
+    """Properties (b)/(c): any node reaches any other via exactly the
+    src -> master(src) -> master(dst) -> dst relay."""
+    topo = LegionTopology.build(list(range(n)), k)
+    src = data.draw(st.integers(0, n - 1))
+    dst = data.draw(st.integers(0, n - 1))
+    path = topo.path(src, dst)
+    assert path[0] == src and path[-1] == dst
+    assert len(path) <= 4
+    # every intermediate hop is a master
+    for hop in path[1:-1]:
+        assert topo.is_master(hop)
+    # consecutive hops share a communicator (same legion or both masters)
+    for a, b in zip(path, path[1:]):
+        same_legion = topo.home.get(a) == topo.home.get(b)
+        both_master = topo.is_master(a) and topo.is_master(b)
+        assert same_legion or both_master
+
+
+@given(n=st.integers(2, 60), k=st.integers(2, 10))
+def test_pov_contents(n, k):
+    """POV_i = legion i's members + master of successor (paper Fig. 2)."""
+    topo = LegionTopology.build(list(range(n)), k)
+    if topo.n_legions < 2:
+        return
+    for lg in topo.legions:
+        pov = topo.pov(lg.index)
+        succ = topo.successor(lg.index)
+        assert set(lg.members) <= set(pov)
+        assert succ.master in pov
+        assert len(pov) <= len(lg.members) + 1
+
+
+@given(n=st.integers(3, 60), k=st.integers(2, 8), data=st.data())
+def test_master_is_lowest_rank_and_reelection(n, k, data):
+    topo = LegionTopology.build(list(range(n)), k)
+    victim = data.draw(st.integers(0, n - 1))
+    lg_idx, was_master = topo.remove(victim)
+    lg = next(l for l in topo.legions if l.index == lg_idx)
+    if lg.members:
+        assert lg.master == min(lg.members)      # re-election rule
+        if was_master:
+            assert lg.master != victim
+    topo.compact()
+    assert victim not in topo.nodes
+
+
+@given(n=st.integers(1, 100))
+def test_threshold_selects_flat_or_hierarchical(n):
+    """Paper: hierarchy is worth it for s > 11 (linear S hypothesis)."""
+    topo = make_topology(list(range(n)), LegioPolicy())
+    if n > 12:
+        assert topo.n_legions > 1
+    else:
+        assert topo.n_legions == 1
+
+
+def test_ring_successor_predecessor():
+    topo = LegionTopology.build(list(range(12)), 4)
+    idx = [lg.index for lg in topo.legions]
+    for i in idx:
+        assert topo.predecessor(topo.successor(i).index).index == i
+    # last legion's successor is the first (ring)
+    assert topo.successor(idx[-1]).index == idx[0]
+
+
+def test_assignment_is_final():
+    """Members never migrate legions, even when theirs shrinks to 1."""
+    topo = LegionTopology.build(list(range(9)), 3)
+    topo.remove(4)
+    topo.remove(5)
+    topo.compact()
+    assert topo.home[3] == 1
+    lg = topo.legion_of(3)
+    assert lg.index == 1 and lg.members == [3]
+
+
+def test_empty_legion_leaves_ring():
+    topo = LegionTopology.build(list(range(6)), 2)
+    topo.remove(2)
+    topo.remove(3)
+    topo.compact()
+    assert [lg.index for lg in topo.legions] == [0, 2]
+    assert topo.successor(0).index == 2
+    assert topo.successor(2).index == 0

@@ -1,0 +1,153 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.models.ssd import ssd_decode_step
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,K,hd,causal,window,softcap",
+    [
+        (1, 128, 128, 4, 4, 32, True, 0, 0.0),     # MHA causal
+        (2, 128, 128, 8, 2, 32, True, 0, 0.0),     # GQA 4x
+        (1, 256, 256, 4, 1, 64, True, 0, 0.0),     # MQA
+        (1, 128, 128, 4, 2, 32, True, 64, 0.0),    # sliding window
+        (1, 128, 128, 4, 2, 32, True, 0, 30.0),    # grok-style softcap
+        (2, 64, 192, 4, 4, 32, False, 0, 0.0),     # cross-attention shape
+    ],
+)
+def test_flash_attention_sweep(B, Sq, Sk, H, K, hd, causal, window, softcap,
+                               dtype, key):
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (B, Sq, H, hd), dtype)
+    k = rand(ks[1], (B, Sk, K, hd), dtype)
+    v = rand(ks[2], (B, Sk, K, hd), dtype)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, logit_softcap=softcap,
+        block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              logit_softcap=softcap)
+    tol = ATOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+    assert out.dtype == q.dtype
+
+
+def test_flash_attention_q_offset(key):
+    """Decode-time block: queries at absolute positions past the KV start."""
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (1, 64, 4, 32), jnp.float32)
+    k = rand(ks[1], (1, 128, 4, 32), jnp.float32)
+    v = rand(ks[2], (1, 128, 4, 32), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, q_offset=64,
+                                 block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, q_offset=64)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_shapes(key):
+    """Block-size sweep must not change results (pure tiling)."""
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (1, 256, 4, 32), jnp.float32)
+    k = rand(ks[1], (1, 256, 2, 32), jnp.float32)
+    v = rand(ks[2], (1, 256, 2, 32), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                     block_k=bk, interpret=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5, err_msg=f"{bq}x{bk}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,Q",
+    [
+        (2, 128, 4, 16, 2, 32, 32),
+        (1, 256, 8, 32, 2, 64, 64),
+        (1, 64, 4, 16, 1, 32, 64),       # S < 2 chunks
+        (2, 96, 4, 16, 4, 32, 32),       # G == H
+    ],
+)
+def test_ssd_scan_sweep(B, S, H, P, G, N, Q, dtype, key):
+    ks = jax.random.split(key, 6)
+    x = rand(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = rand(ks[3], (B, S, G, N), dtype) * 0.3
+    Cm = rand(ks[4], (B, S, G, N), dtype) * 0.3
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+    y, s = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=Q, initial_state=h0,
+                           interpret=True)
+    y_ref, s_ref = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=min(Q, S),
+                                initial_state=h0)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(s, s_ref, atol=tol, rtol=tol)
+    assert y.dtype == x.dtype
+
+
+def test_ssd_scan_vs_sequential_decode(key):
+    """Ground truth: the chunked kernel equals token-by-token recurrence."""
+    B, S, H, P, G, N = 1, 40, 2, 8, 1, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    # kernel with chunk 16 over padded length (40 % 16 != 0 -> pad path)
+    y, h = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    # sequential oracle
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        yt, state = ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], state)
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y, y_seq, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h, state, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_state_handoff(key):
+    """Splitting a sequence across two kernel calls == one call (prefill->decode)."""
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y_full, h_full = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    y1, h1 = ssd_scan_pallas(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32],
+                             chunk=32, interpret=True)
+    y2, h2 = ssd_scan_pallas(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:],
+                             chunk=32, initial_state=h1, interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h2, h_full, atol=1e-4, rtol=1e-4)
+
+
+def test_ops_wrappers_jit(key):
+    """ops.py wrappers are jit-compatible and pick interpret mode on CPU."""
+    from repro.kernels import ops
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (1, 64, 4, 32), jnp.float32)
+    k = rand(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = rand(ks[2], (1, 64, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)

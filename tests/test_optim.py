@@ -1,0 +1,103 @@
+"""Optimizer + gradient compression (error feedback) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.compression import (
+    compress_int8,
+    compress_topk,
+    compressed_bytes,
+    decompress_int8,
+    decompress_topk,
+    make_compressor,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                     weight_decay=0.0)
+    lr = cosine_schedule(tc)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(150):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        updates, opt = adamw_update(grads, opt, params, tc, lr(opt.step))
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert norm == pytest.approx(10.0)
+    assert global_norm(clipped) == pytest.approx(1.0, rel=1e-5)
+    # below the max: untouched
+    same, _ = clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(same["a"], grads["a"])
+
+
+def test_cosine_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lr = cosine_schedule(tc)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-2)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-2)
+    # monotone decay after warmup
+    vals = [float(lr(jnp.asarray(s))) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+@given(seed=st.integers(0, 1000))
+def test_int8_roundtrip_error_bounded(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    c = compress_int8(g)
+    back = decompress_int8(c)
+    # quantization error bounded by scale/2 per entry
+    assert float(jnp.max(jnp.abs(back - g))) <= float(c.scale) * 0.51
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0])
+    c = compress_topk(g, fraction=0.34)           # k = 2
+    back = decompress_topk(c, g.shape)
+    np.testing.assert_allclose(back, [0, -5.0, 0, 3.0, 0, 0])
+
+
+def test_error_feedback_accumulates():
+    """With error feedback the compressed sum converges to the true sum."""
+    comp, decomp = make_compressor("topk", fraction=0.25)
+    g = {"w": jnp.asarray([1.0, 0.5, 0.25, 0.125])}
+    residual = None
+    total = jnp.zeros(4)
+    for _ in range(16):
+        payload, residual = comp(g, residual)
+        total = total + decomp(payload, g)["w"]
+    # every coordinate eventually flushes through the top-k channel
+    np.testing.assert_allclose(total / 16, g["w"], atol=0.15)
+
+
+def test_compressed_bytes_model():
+    g = jnp.zeros((1000,), jnp.bfloat16)
+    assert compressed_bytes(g, "none") == 2000
+    assert compressed_bytes(g, "int8") == 1004
+    assert compressed_bytes(g, "topk", 0.05) == 8 * 50
+
+
+def test_int8_compressor_tree():
+    comp, decomp = make_compressor("int8")
+    g = {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([[3.0]])}
+    payload, residual = comp(g, None)
+    back = decomp(payload, g)
+    np.testing.assert_allclose(back["a"], g["a"], atol=0.05)
+    np.testing.assert_allclose(back["b"], g["b"], atol=0.05)

@@ -1,0 +1,83 @@
+"""Eq. 1–4 checks: optimal legion size and the hierarchical threshold."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.policy import (
+    LegioPolicy,
+    eq3_s_of_k,
+    eq4_s_of_k,
+    optimal_k_linear,
+    optimal_k_quadratic,
+)
+from repro.core.shrink import ShrinkCostModel, ShrinkEngine
+
+
+@given(k=st.integers(2, 60))
+def test_eq3_roundtrip(k):
+    """k -> s(k) -> k must be the identity on exact Eq. 3 points."""
+    s = eq3_s_of_k(k)
+    assert optimal_k_linear(round(s)) == k
+
+
+@given(k=st.integers(2, 60))
+def test_eq4_roundtrip(k):
+    s = eq4_s_of_k(k)
+    assert abs(optimal_k_quadratic(round(s)) - k) <= 1
+
+
+@given(s=st.integers(2, 5000))
+def test_optimal_k_bounds(s):
+    kl = optimal_k_linear(s)
+    kq = optimal_k_quadratic(s)
+    assert 1 <= kl <= s
+    assert 1 <= kq <= s
+    # linear-S optimum k ~ (2s)^(1/3); quadratic ~ sqrt(s·sqrt(3)/2)^(1/2)...
+    # sanity: quadratic favors larger legions than linear for big s
+    if s > 50:
+        assert kq >= kl
+
+
+@given(s=st.integers(12, 2000))
+def test_hierarchical_beats_flat_beyond_threshold(s):
+    """Paper: with PURE linear S (no constant term — the paper's Eq. 2
+    setting), hierarchy wins for s > 11 (∃k: R_H < S(s))."""
+    engine = ShrinkEngine(LegioPolicy(), ShrinkCostModel(p=1.0, c=0.0))
+    k = optimal_k_linear(s)
+    assert engine.expected_repair_cost(s, k) < engine.cost_flat(s)
+
+
+def test_constant_term_moves_crossover():
+    """With a per-shrink constant (agreement+revoke) the crossover moves
+    past the paper's s=11 — the master case pays c four times (Eq. 1)."""
+    engine = ShrinkEngine(LegioPolicy(), ShrinkCostModel(p=1.0, c=0.12))
+    assert engine.expected_repair_cost(12, optimal_k_linear(12)) \
+        > engine.cost_flat(12)
+    s0 = next(s for s in range(12, 4000)
+              if min(engine.expected_repair_cost(s, k)
+                     for k in range(2, s)) < engine.cost_flat(s))
+    assert 12 < s0 < 1000
+
+
+def test_flat_wins_when_tiny():
+    engine = ShrinkEngine(LegioPolicy(), ShrinkCostModel(p=1.0))
+    # s <= 11: no k strictly better than flat under E[R_H]
+    for s in range(2, 8):
+        best = min(engine.expected_repair_cost(s, k) for k in range(1, s + 1))
+        assert best >= engine.cost_flat(s) * 0.8  # no meaningful win
+
+
+def test_policy_choose_k():
+    p = LegioPolicy(legion_size=5)
+    assert p.choose_k(100) == 5
+    assert p.choose_k(3) == 3            # capped at cluster size
+    auto = LegioPolicy()
+    assert auto.choose_k(256) == optimal_k_linear(256)
+
+
+def test_use_hierarchical_threshold():
+    p = LegioPolicy()
+    assert not p.use_hierarchical(11)
+    assert not p.use_hierarchical(12)
+    assert p.use_hierarchical(13)

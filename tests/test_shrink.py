@@ -1,0 +1,94 @@
+"""Repair plans and the S(x) cost model (paper §V Fig. 3, Eq. 1)."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import LegioPolicy
+from repro.core.shrink import ShrinkCostModel, ShrinkEngine
+
+
+def make_engine(**kw):
+    return ShrinkEngine(LegioPolicy(), ShrinkCostModel(**kw))
+
+
+def test_worker_failure_is_local():
+    """Non-master failure: one local shrink, cost S(k) — nothing else."""
+    topo = LegionTopology.build(list(range(16)), 4)
+    eng = make_engine()
+    steps = eng.plan(topo, {5})                 # 5 is not master of legion 1
+    assert [s.op for s in steps] == ["shrink"]
+    assert steps[0].comm == "local_1"
+    assert steps[0].cost_units == eng.cost.s_of_x(4)
+
+
+def test_master_failure_full_plan():
+    """Master failure: Fig. 3's six stages, Eq. 1's cost."""
+    topo = LegionTopology.build(list(range(16)), 4)
+    eng = make_engine()
+    steps = eng.plan(topo, {4})                 # master of legion 1
+    ops = [s.op for s in steps]
+    assert ops == ["shrink", "notify", "shrink", "shrink", "shrink",
+                   "promote", "include"]
+    comms = [s.comm for s in steps]
+    assert comms == ["local_1", "pov_0", "pov_0", "pov_1", "global",
+                     "local_1", "global"]
+    total = sum(s.cost_units for s in steps)
+    expected = eng.cost.hierarchical_cost(16, 4, master_failed=True)
+    assert total == pytest.approx(expected)
+    # the new master is the next-lowest surviving rank of legion 1
+    promote = next(s for s in steps if s.op == "promote")
+    assert promote.participants == (5,)
+
+
+def test_flat_plan():
+    topo = LegionTopology.flat(list(range(8)))
+    eng = make_engine()
+    steps = eng.plan(topo, {3})
+    assert len(steps) == 1 and steps[0].comm == "world"
+    assert steps[0].cost_units == eng.cost.s_of_x(8)
+
+
+@given(n=st.integers(4, 80), k=st.integers(2, 8), data=st.data())
+def test_repair_removes_exactly_failed(n, k, data):
+    topo = LegionTopology.build(list(range(n)), k)
+    eng = make_engine()
+    n_fail = data.draw(st.integers(1, min(3, n - 1)))
+    failed = set(data.draw(st.permutations(list(range(n))))[:n_fail])
+    report = eng.repair(topo, failed)
+    assert set(topo.nodes) == set(range(n)) - failed
+    assert report.survivors == n - len(failed)
+    assert report.trigger == tuple(sorted(failed))
+    # masters are re-elected everywhere
+    for lg in topo.legions:
+        assert lg.master == min(lg.members)
+
+
+@given(s=st.integers(13, 1000))
+def test_eq1_master_vs_worker_cost(s):
+    eng = make_engine(p=1.0)
+    k = LegioPolicy().choose_k(s)
+    worker = eng.cost_hierarchical(s, k, False)
+    master = eng.cost_hierarchical(s, k, True)
+    assert worker == eng.cost.s_of_x(k)
+    assert master > worker                      # Eq. 1: master repair dearer
+    # Eq. 1 structure: S(k) + 2 S(k+1) + S(s/k)
+    assert master == pytest.approx(
+        eng.cost.s_of_x(k) + 2 * eng.cost.s_of_x(k + 1)
+        + eng.cost.s_of_x(max(1, round(s / k))))
+
+
+def test_quadratic_model_monotone():
+    eng = make_engine(p=2.0)
+    costs = [eng.cost_flat(s) for s in (8, 64, 256, 1024)]
+    assert all(b > a for a, b in zip(costs, costs[1:]))
+    ratios = [b / a for a, b in zip(costs, costs[1:])]
+    assert ratios[-1] > 10                      # superlinear growth
+
+
+def test_multi_failure_one_shrink_per_legion():
+    topo = LegionTopology.build(list(range(16)), 4)
+    eng = make_engine()
+    steps = eng.plan(topo, {1, 2})              # two workers, same legion
+    assert [s.op for s in steps] == ["shrink"]
+    steps = eng.plan(topo, {1, 5})              # two workers, two legions
+    assert [s.op for s in steps] == ["shrink", "shrink"]
