@@ -1,0 +1,19 @@
+# Convenience targets — CI (.github/workflows/ci.yml) runs exactly these.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-quick bench install-dev
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+# fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
+bench-quick:
+	$(PYTHON) -m benchmarks.run fig10 optimal_k
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+install-dev:
+	$(PYTHON) -m pip install -e ".[dev]"

@@ -5,6 +5,7 @@ Layering (paper section -> module):
   §III detector      heartbeats, noticing semantics (BNP), stragglers
   §IV agreement      fault agreement (BNP fix), in-program bitmap psum
   §V  shrink         S(x) cost model, Eq. 1-4, Fig. 3 repair plans
+  —   substitute     warm spare pool, slot-preserving substitution repair
   §V  collectives    hierarchical op schedules + shard_map psum variants
   §IV batch          DROP / REBALANCE shard reassignment
   —   mesh_manager   survivors -> jax.Mesh, reshard, compile cache
@@ -18,6 +19,8 @@ from repro.core.batch import (
     gradient_scale,
     initial_assignment,
     reassign,
+    restore_rank,
+    substitute_assign,
 )
 from repro.core.collectives import (
     HierarchicalCollectives,
@@ -50,7 +53,15 @@ from repro.core.policy import (
     optimal_k_linear,
     optimal_k_quadratic,
 )
-from repro.core.shrink import ShrinkCostModel, ShrinkEngine
+from repro.core.shrink import ShrinkCostModel, ShrinkEngine, failures_by_legion
+from repro.core.substitute import (
+    PendingSubstitution,
+    SparePool,
+    SparePoolExhausted,
+    SubstituteCostModel,
+    SubstituteEngine,
+    restore_for_substitute,
+)
 from repro.core.trainer import ResilientTrainer, TrainerReport, make_train_step
 from repro.core.types import (
     FailureEvent,
@@ -66,12 +77,15 @@ __all__ = [
     "FaultInjector", "HeartbeatDetector", "HierarchicalCollectives",
     "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
     "LegioPolicy", "LinkModel", "MeshManager", "NodeState", "OpStatus",
-    "RepairReport", "RepairStep", "ResilientTrainer", "RootFailedError",
-    "ShrinkCostModel", "ShrinkEngine", "StepReport", "StragglerDetector",
-    "TrainerReport", "VirtualCluster", "agree_fault", "agreement_rounds",
-    "agreement_time", "flat_collective_time", "gradient_scale",
-    "hierarchical_psum", "hierarchical_psum_scatter", "initial_assignment",
-    "liveness_psum", "make_hierarchical_allreduce", "make_topology",
-    "make_train_step", "notice_fault", "optimal_k_linear",
+    "PendingSubstitution", "RepairReport", "RepairStep", "ResilientTrainer",
+    "RootFailedError", "ShrinkCostModel", "ShrinkEngine", "SparePool",
+    "SparePoolExhausted", "StepReport", "StragglerDetector",
+    "SubstituteCostModel", "SubstituteEngine", "TrainerReport",
+    "VirtualCluster", "agree_fault", "agreement_rounds",
+    "agreement_time", "failures_by_legion", "flat_collective_time",
+    "gradient_scale", "hierarchical_psum", "hierarchical_psum_scatter",
+    "initial_assignment", "liveness_psum", "make_hierarchical_allreduce",
+    "make_topology", "make_train_step", "notice_fault", "optimal_k_linear",
     "optimal_k_quadratic", "eq3_s_of_k", "eq4_s_of_k", "reassign",
+    "restore_for_substitute", "restore_rank", "substitute_assign",
 ]

@@ -81,6 +81,62 @@ def reassign(
     raise ValueError(f"unknown batch policy {policy!r}")
 
 
+def substitute_assign(plan: BatchPlan, mapping: dict[int, int]) -> BatchPlan:
+    """Blocking substitution: each failed node's shards move wholesale to
+    its substitute (exact capacity restoration — the counter-based pipeline
+    regenerates them bit-exactly on the new owner)."""
+    if not mapping:
+        return plan
+    assignments = tuple(sorted(
+        (ShardAssignment(node=mapping.get(a.node, a.node), shards=a.shards)
+         for a in plan.assignments),
+        key=lambda a: a.node,
+    ))
+    return BatchPlan(assignments=assignments,
+                     dropped_shards=plan.dropped_shards,
+                     policy="substitute")
+
+
+def restore_rank(plan: BatchPlan, node: int,
+                 shards: tuple[int, ...] | None = None) -> BatchPlan:
+    """Non-blocking substitution, deferred half: return capacity to a
+    restored rank. Under DROP the orphaned shards are sitting in
+    ``dropped_shards`` — the restored node takes back *its* shards
+    (``shards``, the failed slot's assignment at fault time; shards dropped
+    for other, never-substituted failures stay dropped). Under REBALANCE
+    nothing was dropped, so the restored node pulls shards back from the
+    most-loaded survivors until the spread is <= 1 (the inverse of the
+    round-robin handout)."""
+    if any(a.node == node for a in plan.assignments):
+        raise ValueError(f"node {node} already holds an assignment")
+    pool = set(plan.dropped_shards)
+    take = sorted(pool if shards is None else pool & set(shards))
+    if take:
+        assignments = plan.assignments + (
+            ShardAssignment(node=node, shards=tuple(take)),)
+        return BatchPlan(
+            assignments=tuple(sorted(assignments, key=lambda a: a.node)),
+            dropped_shards=tuple(sorted(pool - set(take))),
+            policy="substitute",
+        )
+    buckets: dict[int, list[int]] = {a.node: list(a.shards)
+                                     for a in plan.assignments}
+    buckets[node] = []
+    while True:
+        donor = max(buckets, key=lambda n: (len(buckets[n]), -n))
+        if len(buckets[donor]) - len(buckets[node]) <= 1 or donor == node:
+            break
+        buckets[node].append(buckets[donor].pop())
+    return BatchPlan(
+        assignments=tuple(
+            ShardAssignment(node=n, shards=tuple(sorted(buckets[n])))
+            for n in sorted(buckets)
+        ),
+        dropped_shards=plan.dropped_shards,   # unclaimed drops stay recorded
+        policy="substitute",
+    )
+
+
 def gradient_scale(plan: BatchPlan, total_shards: int) -> float:
     """Weight for the gradient mean so the estimator renormalizes over the
     shards actually computed (DROP shrinks the denominator)."""

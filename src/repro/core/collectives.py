@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.hierarchy import LegionTopology
+from repro.dist.compat import shard_map
 
 # Operation classes (paper §V)
 ONE_TO_ONE = "one_to_one"
@@ -180,13 +181,17 @@ class HierarchicalCollectives:
         for lg in topo.legions:
             if not lg.members:
                 continue
+            parts = [contributions[n] for n in lg.members if n in contributions]
+            if not parts:
+                # whole legion is silent this step (e.g. a just-spliced spare
+                # that has not computed yet) — it simply contributes nothing
+                continue
             t = self._stage(stages, f"local_{lg.index}", len(lg), nbytes, cross=False)
             t_par = max(t_par, t)
-            partials[lg.master] = _tree_reduce(
-                [contributions[n] for n in lg.members if n in contributions], op)
+            partials[lg.master] = _tree_reduce(parts, op)
         # 2. global_comm reduces master partials to the root's master —
         #    the slow hop: compress here (sum-compatible ops only)
-        masters = topo.masters
+        masters = [m for m in topo.masters if m in partials]
         cross_bytes = nbytes
         if self.compression != "none" and op in (np.add,):
             sent = [self._compress_cross(m, partials[m]) for m in masters]
@@ -305,7 +310,7 @@ def make_hierarchical_allreduce(mesh: Mesh, spec: P):
     names = mesh.axis_names
     has_pod = "pod" in names
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec, out_specs=spec)
+    @functools.partial(shard_map, mesh=mesh, in_specs=spec, out_specs=spec)
     def _allreduce(x):
         if has_pod:
             return hierarchical_psum(x, legion_axis="pod", member_axis="data")

@@ -35,7 +35,13 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.agreement import agree_fault
-from repro.core.batch import BatchPlan, gradient_scale, initial_assignment, reassign
+from repro.core.batch import (
+    BatchPlan,
+    initial_assignment,
+    reassign,
+    restore_rank,
+    substitute_assign,
+)
 from repro.core.collectives import HierarchicalCollectives, LinkModel
 from repro.core.detector import (
     FaultInjector,
@@ -46,12 +52,19 @@ from repro.core.detector import (
 from repro.core.hierarchy import LegionTopology, make_topology
 from repro.core.policy import LegioPolicy
 from repro.core.shrink import ShrinkEngine
+from repro.core.substitute import (
+    PendingSubstitution,
+    SparePool,
+    SubstituteEngine,
+    restore_for_substitute,
+)
 from repro.core.types import (
     ClusterClock,
     FailureEvent,
     FailureKind,
     NodeState,
     RepairReport,
+    RepairStep,
 )
 
 
@@ -70,6 +83,7 @@ class StepReport:
     sim_collective_seconds: float = 0.0
     wall_seconds: float = 0.0
     grad_scale: float = 1.0
+    expanded: tuple[tuple[int, int], ...] = ()  # non-blocking splices applied
 
 
 class VirtualCluster:
@@ -83,6 +97,7 @@ class VirtualCluster:
         injector: FaultInjector | None = None,
         link: LinkModel | None = None,
         shards_per_node: int = 1,
+        checkpointer: Any = None,       # LegionCheckpointer (state restoration)
     ):
         self.policy = policy or LegioPolicy()
         self.injector = injector or FaultInjector()
@@ -95,23 +110,56 @@ class VirtualCluster:
             self.detector.register(n)
         self.straggler = StragglerDetector(threshold=self.policy.straggler_threshold)
         self.shrink = ShrinkEngine(self.policy)
+        self.substitute = SubstituteEngine(self.policy)
         self.clock = ClusterClock()
         self.failed: set[int] = set()            # ground truth (hidden from app)
         self.plan: BatchPlan = initial_assignment(self.nodes, shards_per_node)
         self.shards_per_node = shards_per_node
         self.total_shards = n_nodes * shards_per_node
-        self.spares: list[int] = [n_nodes + i for i in range(self.policy.spare_nodes)]
+        self.spare_pool = SparePool.provision(n_nodes, self.policy)
+        self.pending: list[PendingSubstitution] = []
+        self.checkpointer = checkpointer
+        self.restored_state: dict[int, Any] = {}  # this step's splices only
+        self._restored_step = -1
         self.repairs: list[RepairReport] = []
+        self._step = 0
         # error-feedback residuals for compressed cross-legion reduction
         self.compress_residuals: dict[int, Any] = {}
+
+    @property
+    def spares(self) -> list[int]:
+        """Warm spares still available (legacy view of the pool)."""
+        return self.spare_pool.available
 
     # -- fault plumbing ---------------------------------------------------------
 
     def inject(self, step: int) -> list[FailureEvent]:
+        self._step = step
         events = self.injector.due(step)
         for e in events:
             if e.node in self.topo.nodes:
                 self.failed.add(e.node)
+            elif e.node in self.spare_pool.available:
+                # a warm spare can die too — it must never be spliced in
+                self.failed.add(e.node)
+                self.spare_pool.available.remove(e.node)
+            elif any(p.spare == e.node for p in self.pending):
+                # died while warming up: reschedule the splice on the next
+                # warm spare (fresh warmup); with the pool empty the slot
+                # stays shrunk — fatal under strict substitute semantics
+                self.failed.add(e.node)
+                dead = [p for p in self.pending if p.spare == e.node]
+                self.pending = [p for p in self.pending if p.spare != e.node]
+                for p in dead:
+                    self.spare_pool.require(
+                        1, self.policy.recovery_mode == "substitute")
+                    replacement = self.spare_pool.take()
+                    if replacement is None:
+                        continue
+                    self.pending.append(PendingSubstitution(
+                        failed=p.failed, spare=replacement, legion=p.legion,
+                        ready_step=step + 1 + self.policy.spare_warmup_steps,
+                        shards=p.shards))
         return events
 
     def collectives(self) -> HierarchicalCollectives:
@@ -127,19 +175,82 @@ class VirtualCluster:
 
     # -- repair -------------------------------------------------------------------
 
+    def _note_restored(self, spare: int, state: Any) -> None:
+        """Record a splice's restored state, evicting previous steps' entries
+        — consumers copy what they need within the step; unbounded retention
+        would keep one full model+opt snapshot per fault for the campaign's
+        lifetime."""
+        if self._restored_step != self._step:
+            self.restored_state.clear()
+            self._restored_step = self._step
+        self.restored_state[spare] = state
+
     def repair(self, verdict: set[int]) -> RepairReport | None:
         if not verdict:
             return None
-        report = self.shrink.repair(self.topo, verdict)
+        if self.policy.substitution_enabled \
+                and not self.policy.nonblocking_substitution:
+            report = self._repair_substitute(verdict)
+        elif self.policy.substitution_enabled:
+            report = self._repair_nonblocking(verdict)
+        else:
+            report = self._repair_shrink(verdict)
         for n in verdict:
             self.detector.confirm_failed(n)
             self.straggler.drop(n)
         self.clock.charge(report.model_cost)
-        # elastic regrow: pull spares into the smallest legion (beyond-paper)
+        self.repairs.append(report)
+        return report
+
+    def _repair_substitute(self, verdict: set[int]) -> RepairReport:
+        """Blocking substitution: splice spares in during the repair itself;
+        the substituted ranks compute from the next step."""
+        report = self.substitute.repair(self.topo, verdict, self.spare_pool)
+        for failed, spare in report.substitutions:
+            self.detector.register(spare)
+            self._note_restored(spare, restore_for_substitute(
+                self.checkpointer, self.topo.home[spare], failed))
+        self.plan = substitute_assign(self.plan, report.substitution_map)
+        if report.unfilled:
+            self.plan = reassign(self.plan, set(report.unfilled),
+                                 self.policy.batch_policy)
+        return report
+
+    def _repair_nonblocking(self, verdict: set[int]) -> RepairReport:
+        """Non-blocking substitution: repair by shrink now (the next step
+        runs degraded), schedule the splice for after the spare's warmup."""
+        homes = {n: self.topo.home[n] for n in verdict
+                 if n in self.topo.home and n in self.topo.nodes}
+        self.spare_pool.require(len(homes),
+                                self.policy.recovery_mode == "substitute")
+        # each pending splice returns exactly the failed node's own shards
+        owned = {n: self.plan.shards_of(n) for n in homes}
+        report = self._repair_shrink(verdict, regrow=False)
+        scheduled = 0
+        for node, legion in sorted(homes.items()):
+            spare = self.spare_pool.take()
+            if spare is None:
+                break  # substitute_then_shrink: stay shrunk
+            scheduled += 1
+            # the fault step itself ran degraded; spare_warmup_steps MORE
+            # steps run shrunk before the splice lands at a boundary
+            self.pending.append(PendingSubstitution(
+                failed=node, spare=spare, legion=legion,
+                ready_step=self._step + 1 + self.policy.spare_warmup_steps,
+                shards=owned[node]))
+        report.mode = ("substitute(nonblocking)" if scheduled == len(homes)
+                       else "substitute_then_shrink")
+        return report
+
+    def _repair_shrink(self, verdict: set[int], *,
+                       regrow: bool = True) -> RepairReport:
+        report = self.shrink.repair(self.topo, verdict)
+        # elastic regrow: pull spares into the smallest legion (beyond-paper;
+        # predates slot-preserving substitution — kept for recovery_mode=
+        # "shrink" with a provisioned pool)
         grown = []
-        while self.spares and self.topo.size < self.n_initial \
-                and self.policy.spare_nodes > 0:
-            spare = self.spares.pop(0)
+        while regrow and self.spares and self.topo.size < self.n_initial:
+            spare = self.spare_pool.take()
             target = min((lg for lg in self.topo.legions if lg.members),
                          key=len, default=None)
             if target is None:
@@ -151,7 +262,6 @@ class VirtualCluster:
             self.detector.register(spare)
             grown.append(spare)
         if grown:
-            from repro.core.types import RepairStep
             report.steps.append(RepairStep(
                 op="include", comm="world", participants=tuple(grown),
                 cost_units=0.0))
@@ -168,8 +278,47 @@ class VirtualCluster:
                 assignments=tuple(new_assignments),
                 dropped_shards=tuple(take),
                 policy=self.plan.policy)
-        self.repairs.append(report)
         return report
+
+    # -- deferred (non-blocking) substitution --------------------------------
+
+    def poll_substitutions(self, step: int) -> list[RepairReport]:
+        """Apply every pending splice whose warmup has elapsed — called at
+        the step boundary, before new work is assigned. Re-expansion is a
+        mini-repair of its own: an include into the home legion plus the
+        (overlapped, hence uncharged) state restore."""
+        ready = [p for p in self.pending if p.ready_step <= step]
+        if not ready:
+            return []
+        self.pending = [p for p in self.pending if p.ready_step > step]
+        self._step = step
+        reports = []
+        for p in ready:
+            t0 = time.perf_counter()
+            self.topo.expand(p.legion, p.spare)
+            self.detector.register(p.spare)
+            self._note_restored(p.spare, restore_for_substitute(
+                self.checkpointer, p.legion, p.failed))
+            self.plan = restore_rank(self.plan, p.spare, shards=p.shards)
+            k = len(self.topo.legion_of(p.spare).members)
+            steps = [RepairStep(op="substitute", comm=f"local_{p.legion}",
+                                participants=(p.spare,),
+                                cost_units=self.substitute.cost.splice_cost(k - 1))]
+            report = RepairReport(
+                trigger=(p.failed,),
+                hierarchical=self.topo.n_legions > 1,
+                master_failed=False,
+                steps=steps,
+                model_cost=sum(st.cost_units for st in steps),
+                wall_seconds=time.perf_counter() - t0,
+                survivors=self.topo.size,
+                mode="substitute(nonblocking)",
+                substitutions=((p.failed, p.spare),),
+            )
+            self.clock.charge(report.model_cost)
+            self.repairs.append(report)
+            reports.append(report)
+        return reports
 
 
 class LegioExecutor:
@@ -197,11 +346,15 @@ class LegioExecutor:
         cl = self.cluster
         step = self.step_count if step is None else step
         t_start = time.perf_counter()
+        # 0. step boundary: warmed-up non-blocking substitutes rejoin first,
+        #    so the work assignment below already covers the restored slots
+        expansions = cl.poll_substitutions(step)
         events = cl.inject(step)
         del events  # ground truth is hidden; detection is observational
 
         # 1. per-node shard work (only live nodes actually compute)
         results: dict[int, Any] = {}
+        computed_shards = 0
         for node in cl.live_nodes:
             t0 = time.perf_counter()
             shards = cl.plan.shards_of(node)
@@ -209,6 +362,7 @@ class LegioExecutor:
                 continue
             out = [self.work_fn(node, s, step) for s in shards]
             results[node] = out[0] if len(out) == 1 else _sum_results(out)
+            computed_shards += len(shards)
             cl.straggler.observe(node, time.perf_counter() - t0)
             cl.detector.beat(node, cl.clock.sim_seconds)
 
@@ -274,7 +428,12 @@ class LegioExecutor:
             skipped_op=skipped,
             sim_collective_seconds=sim_t,
             wall_seconds=time.perf_counter() - t_start,
-            grad_scale=gradient_scale(cl.plan, cl.total_shards),
+            # renormalize over the shards that actually contributed THIS step
+            # (the post-repair plan may already show restored capacity a
+            # just-spliced spare did not compute yet)
+            grad_scale=(cl.total_shards / computed_shards
+                        if computed_shards else 0.0),
+            expanded=tuple(s for r in expansions for s in r.substitutions),
         )
 
     def run(self, n_steps: int) -> list[StepReport]:

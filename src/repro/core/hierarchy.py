@@ -150,6 +150,43 @@ class LegionTopology:
         """Drop empty legions (a legion that lost all members leaves the ring)."""
         self.legions = [lg for lg in self.legions if lg.members]
 
+    def substitute(self, failed: int, spare: int) -> int:
+        """Splice ``spare`` into ``failed``'s legion slot. Returns the legion
+        index. Preserves the paper's invariants: the spare's assignment is
+        final (recorded in ``home``), legion count is unchanged (so the POV
+        ring and master-path structure are untouched), and the master stays
+        the lowest surviving rank — spare ids are allocated above every
+        initial node id, so a substitution never demotes a survivor."""
+        if spare in self.home:
+            raise ValueError(f"spare {spare} already belongs to legion "
+                             f"{self.home[spare]} — assignment is final")
+        lg = self.legion_of(failed)
+        lg.members.remove(failed)
+        lg.members.append(spare)
+        lg.members.sort()
+        self.home[spare] = lg.index
+        return lg.index
+
+    def expand(self, legion_index: int, node: int) -> None:
+        """Re-admit a slot at ``legion_index`` for ``node`` (the deferred half
+        of a non-blocking substitution). If the legion left the ring when it
+        emptied, it rejoins at its original position — index order is ring
+        order, so the POV ring stays consistent."""
+        if node in self.home:
+            raise ValueError(f"node {node} already belongs to legion "
+                             f"{self.home[node]} — assignment is final")
+        for lg in self.legions:
+            if lg.index == legion_index:
+                lg.members.append(node)
+                lg.members.sort()
+                break
+        else:
+            lg = Legion(index=legion_index, members=[node])
+            pos = next((i for i, other in enumerate(self.legions)
+                        if other.index > legion_index), len(self.legions))
+            self.legions.insert(pos, lg)
+        self.home[node] = legion_index
+
 
 def make_topology(nodes: list[int], policy: LegioPolicy) -> LegionTopology:
     """Paper-faithful entry point: hierarchical iff size > threshold (s > 11)."""

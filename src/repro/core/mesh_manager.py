@@ -42,18 +42,25 @@ class DevicePool:
 
     n_nodes: int
     chips_per_node: int = 1
+    n_spares: int = 0          # warm spares hold devices too (they idle warm)
     devices: list = field(default_factory=lambda: list(jax.devices()))
 
     def node_devices(self, node: int) -> list:
         want = self.chips_per_node
         n_dev = len(self.devices)
-        if self.n_nodes * want <= n_dev:
+        if self.total_nodes * want <= n_dev:
             return self.devices[node * want:(node + 1) * want]
         return [self.devices[(node * want + j) % n_dev] for j in range(want)]
 
     @property
+    def total_nodes(self) -> int:
+        """Initial workers plus the provisioned spare slots: a substituted
+        spare must map onto real devices just like the node it replaces."""
+        return self.n_nodes + self.n_spares
+
+    @property
     def physical(self) -> bool:
-        return self.n_nodes * self.chips_per_node <= len(self.devices)
+        return self.total_nodes * self.chips_per_node <= len(self.devices)
 
 
 class MeshManager:

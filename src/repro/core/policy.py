@@ -49,6 +49,9 @@ def eq4_s_of_k(k: int) -> float:
     return math.sqrt(2.0 * k * k * (2.0 * k * k - 1.0) / 3.0)
 
 
+RECOVERY_MODES = ("shrink", "substitute", "substitute_then_shrink")
+
+
 @dataclass(frozen=True)
 class LegioPolicy:
     legion_size: int = 0                # k; 0 = auto via Eq. 3 (paper's setting)
@@ -60,6 +63,24 @@ class LegioPolicy:
     grad_compression: str = "none"      # none | int8 | topk (cross-legion hop)
     topk_fraction: float = 0.05
     spare_nodes: int = 0                # standby pool for elastic regrow
+    # --- substitution recovery (beyond-paper: Ashraf et al. "Shrink or
+    # Substitute"): shrink discards capacity, substitute splices a warm
+    # spare into the failed node's legion slot. substitute_then_shrink
+    # falls back to shrink once the pool is exhausted; bare substitute
+    # treats exhaustion as fatal (SparePoolExhausted).
+    recovery_mode: str = "shrink"       # shrink | substitute | substitute_then_shrink
+    spare_fraction: float = 0.0         # provision ceil(f * n) warm spares
+    # non-blocking flavor (Bouteiller & Bosilca): after the fault step,
+    # spare_warmup_steps steps run shrunk while the substitute warms up;
+    # the topology then re-expands at the next step boundary.
+    nonblocking_substitution: bool = False
+    spare_warmup_steps: int = 1
+
+    def __post_init__(self) -> None:
+        if self.recovery_mode not in RECOVERY_MODES:
+            raise ValueError(
+                f"recovery_mode must be one of {RECOVERY_MODES}, "
+                f"got {self.recovery_mode!r}")
 
     def choose_k(self, s: int) -> int:
         if self.legion_size > 0:
@@ -68,3 +89,13 @@ class LegioPolicy:
 
     def use_hierarchical(self, s: int) -> bool:
         return s > self.hierarchical_threshold
+
+    def spare_count(self, n_nodes: int) -> int:
+        """Warm spares to provision for an n-node cluster: the larger of the
+        absolute knob and the fractional one."""
+        return max(self.spare_nodes,
+                   math.ceil(self.spare_fraction * n_nodes))
+
+    @property
+    def substitution_enabled(self) -> bool:
+        return self.recovery_mode != "shrink"

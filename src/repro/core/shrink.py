@@ -65,6 +65,27 @@ class ShrinkCostModel:
         return self.s_of_x(k) + 2.0 * self.s_of_x(k + 1) + self.s_of_x(n_masters)
 
 
+def master_failed_in(topo: LegionTopology, failed: set[int],
+                     steps: list[RepairStep]) -> bool:
+    """Did this repair lose a master? Hierarchical plans carry an explicit
+    promote step; flat topologies need the direct check (shared by the
+    shrink and substitute engines — must be evaluated BEFORE mutation)."""
+    return any(st.op == "promote" for st in steps) or (
+        topo.n_legions == 1
+        and any(topo.is_master(n) for n in failed if n in topo.home))
+
+
+def failures_by_legion(topo: LegionTopology, failed: set[int]) -> dict[int, list[int]]:
+    """Group the failed nodes still present in the topology by legion index
+    (simultaneous failures fold legion-by-legion — shared by the shrink and
+    substitute engines)."""
+    by_legion: dict[int, list[int]] = {}
+    for node in sorted(failed):
+        if node in topo.home and any(node in lg.members for lg in topo.legions):
+            by_legion.setdefault(topo.legion_of(node).index, []).append(node)
+    return by_legion
+
+
 class ShrinkEngine:
     """Builds and applies repair plans against a LegionTopology."""
 
@@ -91,13 +112,7 @@ class ShrinkEngine:
             ))
             return steps
 
-        by_legion: dict[int, list[int]] = {}
-        for node in sorted(failed):
-            if node in topo.home:
-                lg = topo.legion_of(node)
-                by_legion.setdefault(lg.index, []).append(node)
-
-        for li, dead in sorted(by_legion.items()):
+        for li, dead in sorted(failures_by_legion(topo, failed).items()):
             lg = next(l for l in topo.legions if l.index == li)
             master_failed = lg.master in dead
             local_survivors = tuple(n for n in lg.members if n not in failed)
@@ -152,9 +167,7 @@ class ShrinkEngine:
         """Plan + mutate the topology. Returns the report (plan, costs, wall)."""
         t0 = time.perf_counter()
         steps = self.plan(topo, failed)
-        master_failed = any(st.op == "promote" for st in steps) or (
-            topo.n_legions == 1 and any(topo.is_master(n) for n in failed if n in topo.home)
-        )
+        master_failed = master_failed_in(topo, failed, steps)
         hierarchical = topo.n_legions > 1
         for node in sorted(failed):
             if node in topo.home and any(node in lg.members for lg in topo.legions):

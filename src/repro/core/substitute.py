@@ -1,0 +1,256 @@
+"""Substitution recovery — warm spares spliced into failed legion slots.
+
+Legio's native semantics are shrink-only (the paper's discard-and-continue),
+which is right for embarrassingly parallel jobs but leaves capacity on the
+floor for long campaigns. This module implements the "substitute" branch of
+Ashraf et al.'s shrink-or-substitute trade-off on top of the same repair
+seam:
+
+  * :class:`SparePool` — warm standby nodes provisioned at cluster start
+    (``LegioPolicy.spare_fraction`` / ``spare_nodes``). Spare ids are
+    allocated *above* every initial node id, so a splice never steals a
+    mastership from a survivor (the paper's lowest-rank master rule).
+  * :class:`SubstituteEngine` — sibling of :class:`ShrinkEngine`. The comm
+    teardown half of its plan is exactly the shrink plan (the failed
+    process must leave every communicator it was in — Fig. 3); the splice
+    half then includes the spare into the failed node's local_comm and
+    restores its state. Topology invariants (a)–(c) hold afterwards because
+    the legion count, POV ring, and home map are preserved by
+    :meth:`LegionTopology.substitute`.
+  * checkpoint-backed restoration — the spare adopts the *dead member's*
+    shard via ``checkpoint.store.restore_member`` (restart-only-failed,
+    §VII): survivors are never touched.
+
+Modes (``LegioPolicy.recovery_mode``):
+  * ``substitute``            — pool exhaustion raises
+                                :class:`SparePoolExhausted` (the operator
+                                asked for capacity-preserving recovery).
+  * ``substitute_then_shrink``— exhaustion degrades to shrink for the
+                                unfilled slots; the run continues degraded.
+
+The non-blocking flavor (``nonblocking_substitution``) is orchestrated by
+the executor: the fault step repairs by shrink (cheap, overlappable) and a
+:class:`PendingSubstitution` re-expands the topology at the first step
+boundary after the spare's warmup — repair overlapping useful work,
+Bouteiller & Bosilca's implicit-actions argument at step granularity.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.hierarchy import LegionTopology
+from repro.core.policy import LegioPolicy
+from repro.core.shrink import (
+    ShrinkCostModel,
+    ShrinkEngine,
+    failures_by_legion,
+    master_failed_in,
+)
+from repro.core.types import RepairReport, RepairStep
+
+PyTree = Any
+
+
+class SparePoolExhausted(RuntimeError):
+    """Raised under recovery_mode="substitute" when no warm spare is left."""
+
+
+@dataclass
+class SparePool:
+    """Warm standby nodes. ``available`` is FIFO: the longest-warm spare is
+    spliced first."""
+
+    capacity: int
+    available: list[int] = field(default_factory=list)
+    consumed: list[int] = field(default_factory=list)
+
+    @staticmethod
+    def provision(n_nodes: int, policy: LegioPolicy) -> "SparePool":
+        """Pool for an ``n_nodes`` cluster; spare ids start at ``n_nodes``."""
+        count = policy.spare_count(n_nodes)
+        return SparePool(capacity=count,
+                         available=[n_nodes + i for i in range(count)])
+
+    def take(self) -> int | None:
+        if not self.available:
+            return None
+        spare = self.available.pop(0)
+        self.consumed.append(spare)
+        return spare
+
+    @property
+    def exhausted(self) -> bool:
+        return not self.available
+
+    def __len__(self) -> int:
+        return len(self.available)
+
+    def require(self, needed: int, strict: bool) -> None:
+        """Under strict (recovery_mode="substitute") semantics, refuse —
+        BEFORE anything is mutated — when the pool cannot cover ``needed``
+        failed slots."""
+        if strict and needed > len(self.available):
+            raise SparePoolExhausted(
+                f"{needed} failed node(s) but only {len(self.available)} "
+                f"warm spare(s) left (recovery_mode='substitute' does not "
+                f"degrade; use 'substitute_then_shrink')")
+
+
+@dataclass(frozen=True)
+class SubstituteCostModel:
+    """Substitution = the shrink teardown + an include of the spare into the
+    surviving local comm + the checkpoint read for state restoration.
+    The splice reuses S(x) (comm reconstruction is the same collective
+    machinery ULFM's shrink pays for); the restore term models the
+    restart-only-failed npz read, which overlaps repair in the non-blocking
+    flavor and is charged only when it blocks."""
+
+    shrink: ShrinkCostModel = field(default_factory=ShrinkCostModel)
+    restore_seconds: float = 0.35      # one member shard read (§VII scale)
+
+    def splice_cost(self, k: int) -> float:
+        return self.shrink.s_of_x(k + 1)
+
+    def substitution_cost(self, s: int, k: int, master_failed: bool,
+                          *, blocking: bool = True) -> float:
+        """Single failure in a k-legion: teardown + include of the spare
+        into the k-1 survivors + (if blocking) the restore read."""
+        base = self.shrink.hierarchical_cost(s, k, master_failed)
+        return base + self.splice_cost(k - 1) + \
+            (self.restore_seconds if blocking else 0.0)
+
+
+@dataclass(frozen=True)
+class PendingSubstitution:
+    """A scheduled non-blocking splice: apply at the first step boundary
+    with ``step >= ready_step``."""
+
+    failed: int
+    spare: int
+    legion: int            # the failed node's home legion (assignment final)
+    ready_step: int
+    shards: tuple[int, ...] = ()   # the failed node's shards at fault time —
+                                   # the splice returns exactly these
+
+
+class SubstituteEngine:
+    """Builds and applies substitution repair plans against a LegionTopology.
+
+    Sibling of :class:`ShrinkEngine`: identical teardown plan, plus one
+    ``substitute`` + ``restore`` stage per filled slot. Slots the pool
+    cannot fill are shrunk (or, under strict mode, refused)."""
+
+    def __init__(self, policy: LegioPolicy,
+                 cost: SubstituteCostModel | None = None):
+        self.policy = policy
+        self.cost = cost or SubstituteCostModel()
+        self._shrink = ShrinkEngine(policy, self.cost.shrink)
+
+    # ---- plan construction -------------------------------------------------
+
+    def plan(self, topo: LegionTopology, failed: set[int],
+             substitutions: dict[int, int]) -> list[RepairStep]:
+        """Teardown steps (the shrink plan) + splice steps per substitution."""
+        steps = self._shrink.plan(topo, failed)
+        for li, dead in sorted(failures_by_legion(topo, failed).items()):
+            lg = next(l for l in topo.legions if l.index == li)
+            # splice participants: the legion's survivors plus the spares
+            # already spliced into it — the dead members are gone by then
+            k_live = len(lg.members) - len(dead)
+            spliced = 0
+            for node in dead:
+                spare = substitutions.get(node)
+                if spare is None:
+                    continue
+                steps.append(RepairStep(
+                    op="substitute", comm=f"local_{li}",
+                    participants=(spare,),
+                    cost_units=self.cost.splice_cost(k_live + spliced)))
+                steps.append(RepairStep(
+                    op="restore", comm=f"local_{li}",
+                    participants=(spare,),
+                    cost_units=self.cost.restore_seconds))
+                spliced += 1
+        return steps
+
+    # ---- application -------------------------------------------------------
+
+    def repair(self, topo: LegionTopology, failed: set[int], pool: SparePool,
+               *, strict: bool | None = None) -> RepairReport:
+        """Plan + mutate: splice spares into every failed slot the pool can
+        cover, shrink the rest. ``strict`` (default: recovery_mode ==
+        "substitute") raises :class:`SparePoolExhausted` instead of
+        degrading."""
+        if strict is None:
+            strict = self.policy.recovery_mode == "substitute"
+        t0 = time.perf_counter()
+        present = [n for n in sorted(failed)
+                   if n in topo.home and n in topo.nodes]
+        pool.require(len(present), strict)
+        substitutions: dict[int, int] = {}
+        for node in present:
+            spare = pool.take()
+            if spare is None:
+                break
+            substitutions[node] = spare
+
+        steps = self.plan(topo, failed, substitutions)
+        master_failed = master_failed_in(topo, set(present), steps)
+        hierarchical = topo.n_legions > 1
+
+        unfilled = []
+        for node in present:
+            if node in substitutions:
+                topo.substitute(node, substitutions[node])
+            else:
+                topo.remove(node)
+                unfilled.append(node)
+        topo.compact()
+
+        wall = time.perf_counter() - t0
+        mode = ("substitute" if not unfilled else "substitute_then_shrink")
+        return RepairReport(
+            trigger=tuple(sorted(failed)),
+            hierarchical=hierarchical,
+            master_failed=master_failed,
+            steps=steps,
+            model_cost=sum(st.cost_units for st in steps),
+            wall_seconds=wall,
+            survivors=topo.size,
+            mode=mode,
+            substitutions=tuple(sorted(substitutions.items())),
+            unfilled=tuple(unfilled),
+        )
+
+    # ---- cost queries (benchmarks) -----------------------------------------
+
+    def cost_substitute(self, s: int, k: int, master_failed: bool,
+                        *, blocking: bool = True) -> float:
+        return self.cost.substitution_cost(s, k, master_failed,
+                                           blocking=blocking)
+
+    def expected_repair_cost(self, s: int, k: int,
+                             *, blocking: bool = True) -> float:
+        """E[cost] under uniform failure probability, P(master) = 1/k."""
+        p_master = 1.0 / max(k, 1)
+        return (p_master * self.cost_substitute(s, k, True, blocking=blocking)
+                + (1 - p_master)
+                * self.cost_substitute(s, k, False, blocking=blocking))
+
+
+def restore_for_substitute(checkpointer, legion: int, failed: int,
+                           *, template: PyTree | None = None) -> PyTree | None:
+    """Checkpoint-backed state restoration for a substituted rank: load the
+    *dead member's* shard (restart-only-failed — the spare takes over the
+    failed node's identity, data shards included). Returns None when no
+    checkpoint covers the member yet (fresh run, or the legion was created
+    after the last snapshot)."""
+    if checkpointer is None:
+        return None
+    try:
+        return checkpointer.restore_failed_member(legion, failed,
+                                                  template=template)
+    except (FileNotFoundError, KeyError):
+        return None

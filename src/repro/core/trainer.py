@@ -102,7 +102,11 @@ class ResilientTrainer:
         self.per_shard_batch = per_shard_batch
         self.seq_len = seq_len
         self.checkpointer = checkpointer
-        self.pool = DevicePool(n_nodes=cluster.n_initial)
+        if checkpointer is not None and cluster.checkpointer is None:
+            # substituted ranks restore from the same per-legion store
+            cluster.checkpointer = checkpointer
+        self.pool = DevicePool(n_nodes=cluster.n_initial,
+                               n_spares=cluster.spare_pool.capacity)
         self.mesh_manager = MeshManager(self.pool)
         self.compile_cache = CompileCache()
         self.train_step = make_train_step(cfg, tc)
@@ -139,11 +143,14 @@ class ResilientTrainer:
         t0 = time.perf_counter()
         step = self.step
 
+        # step boundary: warmed-up non-blocking substitutes rejoin before
+        # new shards are handed out (re-expansion = mesh change too)
+        expansions = cl.poll_substitutions(step)
         # fault injection surfaces BEFORE the step's collective in real runs;
         # here: inject, detect at the step boundary, repair, then compute.
         events = cl.inject(step)
         repair = None
-        recompiled = False
+        recompiled = bool(expansions)
         if events:
             verdict = {e.node for e in events if e.node in cl.topo.nodes}
             repair = cl.repair(verdict)

@@ -41,8 +41,9 @@ class FailureEvent:
 
 @dataclass
 class RepairStep:
-    """One stage of a repair plan (a shrink, a notify, or a promote)."""
-    op: str                      # "shrink" | "notify" | "promote" | "include"
+    """One stage of a repair plan (a shrink, a notify, a promote, or a
+    spare splice)."""
+    op: str                      # shrink | notify | promote | include | substitute | restore
     comm: str                    # local_<i> | pov_<i> | global | world
     participants: tuple[int, ...]
     cost_units: float = 0.0      # S(x) model cost of this stage
@@ -58,13 +59,23 @@ class RepairReport:
     wall_seconds: float = 0.0            # measured runtime of our repair path
     recompiled: bool = False
     survivors: int = 0
+    mode: str = "shrink"                 # recovery mode that produced this plan
+    substitutions: tuple[tuple[int, int], ...] = ()   # (failed, spare) splices
+    unfilled: tuple[int, ...] = ()       # failed slots shrunk for lack of spares
+
+    @property
+    def substitution_map(self) -> dict[int, int]:
+        return dict(self.substitutions)
 
     def summary(self) -> str:
         kind = "hierarchical" if self.hierarchical else "flat"
         role = "master" if self.master_failed else "worker"
-        return (f"[repair/{kind}] failed={list(self.trigger)} role={role} "
-                f"stages={len(self.steps)} model_cost={self.model_cost:.4f}s "
-                f"wall={self.wall_seconds * 1e3:.2f}ms survivors={self.survivors}")
+        sub = f" subs={list(self.substitutions)}" if self.substitutions else ""
+        return (f"[repair/{kind}/{self.mode}] failed={list(self.trigger)} "
+                f"role={role} stages={len(self.steps)} "
+                f"model_cost={self.model_cost:.4f}s "
+                f"wall={self.wall_seconds * 1e3:.2f}ms "
+                f"survivors={self.survivors}{sub}")
 
 
 @dataclass

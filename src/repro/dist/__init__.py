@@ -1,0 +1,15 @@
+"""Distribution layer: sharding rules shared by models, launchers, dry-run."""
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    gather_fsdp,
+    param_specs,
+    sanitize_spec,
+    shard_activations,
+    shard_heads,
+)
+
+__all__ = [
+    "batch_specs", "cache_specs", "gather_fsdp", "param_specs",
+    "sanitize_spec", "shard_activations", "shard_heads",
+]

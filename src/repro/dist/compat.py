@@ -1,0 +1,53 @@
+"""Version-tolerant mesh constructors.
+
+The repo pins ``jax==0.4.37`` (see pyproject.toml) but several mesh APIs
+changed shape across nearby releases: ``jax.make_mesh`` grew an
+``axis_types`` kwarg, ``AbstractMesh`` switched from a shape-tuple pairs
+signature to ``(shape, names)``, and ``jax.sharding.set_mesh`` replaced the
+``with mesh:`` resource context. These wrappers accept the modern calling
+convention and degrade to what the pinned version provides, so source and
+tests have exactly one spelling.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+try:  # jax >= 0.5 re-exports shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> AbstractMesh:
+    """``AbstractMesh`` carrying shape/axis_names without real devices."""
+    try:
+        return AbstractMesh(shape, axes)  # modern (shape, names) signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    """``jax.sharding.set_mesh`` where it exists, else the legacy
+    ``with mesh:`` resource-env context (equivalent for our usage: both make
+    bare-PartitionSpec constraints resolvable inside jit)."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        with set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

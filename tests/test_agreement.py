@@ -10,6 +10,7 @@ from repro.core.agreement import (
     agreement_rounds,
     liveness_psum,
 )
+from repro.dist.compat import make_mesh
 
 
 @given(data=st.data())
@@ -50,8 +51,7 @@ def test_agreement_rounds_log():
 
 
 def test_liveness_psum_single_axis():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     bitmaps = jnp.array([[1, 0, 1, 1]], jnp.int32)
     out = agree_bitmap_inprogram(mesh, bitmaps)
     np.testing.assert_array_equal(out, [1, 0, 1, 1])
@@ -59,8 +59,7 @@ def test_liveness_psum_single_axis():
 
 def test_bitmap_and_reduce_host():
     """Multiple shards, host fallback path: AND of all rows."""
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("x",))
     bitmaps = jnp.array([[1, 1, 0], [1, 0, 1]], jnp.int32)
     out = agree_bitmap_inprogram(mesh, bitmaps)
     np.testing.assert_array_equal(out, [1, 0, 0])

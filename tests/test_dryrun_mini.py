@@ -19,15 +19,14 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax
-    from jax.sharding import AxisType
 
     from repro.configs.base import ShapeSpec, TrainConfig
     from repro.configs.registry import get_smoke_config
+    from repro.dist.compat import make_mesh, use_mesh
     from repro.launch import hlo_stats
     from repro.launch.steps import cell_shardings, input_specs, step_fn_for
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_smoke_config("llama3.2-3b").replace(n_layers=4)
     out = {}
     for shape in (ShapeSpec("mini_train", 64, 8, "train"),
@@ -35,7 +34,7 @@ SCRIPT = textwrap.dedent("""
         specs = input_specs(cfg, shape)
         in_sh, out_sh = cell_shardings(cfg, shape, mesh, specs)
         fn = step_fn_for(cfg, shape, TrainConfig())
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=tuple(in_sh[k] for k in specs),
                              out_shardings=out_sh)
             compiled = jitted.lower(*specs.values()).compile()

@@ -1,0 +1,447 @@
+"""Substitution recovery: spare pool, slot splice, invariants, e2e modes."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    FaultInjector,
+    LegionCheckpointer,
+    LegionTopology,
+    LegioExecutor,
+    LegioPolicy,
+    SparePool,
+    SparePoolExhausted,
+    SubstituteEngine,
+    VirtualCluster,
+    initial_assignment,
+    reassign,
+    restore_rank,
+    substitute_assign,
+)
+
+
+def work(node, shard, step):
+    return np.ones(4) * (shard + 1)
+
+
+def sub_policy(**kw):
+    kw.setdefault("legion_size", 4)
+    kw.setdefault("recovery_mode", "substitute")
+    kw.setdefault("spare_fraction", 0.25)
+    return LegioPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# SparePool / policy provisioning
+# ---------------------------------------------------------------------------
+
+def test_pool_provisioning_fraction_and_absolute():
+    assert SparePool.provision(16, sub_policy()).capacity == 4
+    assert SparePool.provision(16, LegioPolicy(spare_nodes=2)).capacity == 2
+    # the larger knob wins
+    p = LegioPolicy(spare_fraction=0.25, spare_nodes=7)
+    assert SparePool.provision(16, p).capacity == 7
+    # spare ids sit above every initial node id
+    pool = SparePool.provision(16, sub_policy())
+    assert pool.available == [16, 17, 18, 19]
+
+
+def test_pool_take_is_fifo_until_exhausted():
+    pool = SparePool.provision(8, LegioPolicy(spare_nodes=2))
+    assert pool.take() == 8
+    assert pool.take() == 9
+    assert pool.take() is None
+    assert pool.exhausted and pool.consumed == [8, 9]
+
+
+def test_policy_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        LegioPolicy(recovery_mode="resurrect")
+
+
+# ---------------------------------------------------------------------------
+# topology splice invariants (paper §V properties (a)–(c) must survive)
+# ---------------------------------------------------------------------------
+
+def assert_invariants(topo: LegionTopology, n_expected: int):
+    # (a) #communicators linear in #nodes
+    live = [lg for lg in topo.legions if lg.members]
+    assert topo.n_communicators() == 2 * len(live) + 2
+    assert topo.size == n_expected
+    # masters are the lowest surviving rank everywhere
+    for lg in live:
+        assert lg.master == min(lg.members)
+    # (b)/(c): every pair connects via the unique <=4-hop master relay
+    nodes = topo.nodes
+    probe = nodes[:: max(1, len(nodes) // 6)]
+    for src in probe:
+        for dst in probe:
+            path = topo.path(src, dst)
+            assert path[0] == src and path[-1] == dst
+            assert len(path) <= 4
+            for hop in path[1:-1]:
+                assert topo.is_master(hop)
+    # POV ring: each live legion's POV = members + successor master
+    if len(live) > 1:
+        for lg in live:
+            pov = topo.pov(lg.index)
+            assert set(lg.members) <= set(pov)
+            assert topo.successor(lg.index).master in pov
+
+
+@given(n=st.integers(8, 64), k=st.integers(2, 8), data=st.data())
+def test_substitute_preserves_invariants(n, k, data):
+    topo = LegionTopology.build(list(range(n)), k)
+    n_fail = data.draw(st.integers(1, min(3, n - 1)))
+    failed = set(data.draw(st.permutations(list(range(n))))[:n_fail])
+    pool = SparePool(capacity=n_fail,
+                     available=[n + i for i in range(n_fail)])
+    eng = SubstituteEngine(sub_policy(legion_size=k))
+    report = eng.repair(topo, failed, pool)
+    # full capacity restored: every failed slot filled by a spare
+    assert report.mode == "substitute"
+    assert len(report.substitutions) == n_fail and not report.unfilled
+    assert_invariants(topo, n)
+    # the spare landed in the failed node's home legion — assignment final
+    for dead, spare in report.substitutions:
+        assert topo.home[spare] == topo.home[dead]
+
+
+@given(n=st.integers(8, 48), k=st.integers(2, 6), pool_size=st.integers(0, 2),
+       data=st.data())
+def test_then_shrink_falls_back_when_pool_exhausted(n, k, pool_size, data):
+    topo = LegionTopology.build(list(range(n)), k)
+    n_fail = data.draw(st.integers(pool_size + 1, min(4, n - 1)))
+    failed = set(data.draw(st.permutations(list(range(n))))[:n_fail])
+    pool = SparePool(capacity=pool_size,
+                     available=[n + i for i in range(pool_size)])
+    eng = SubstituteEngine(sub_policy(
+        legion_size=k, recovery_mode="substitute_then_shrink"))
+    report = eng.repair(topo, failed, pool)
+    # pool covers what it can; the rest shrinks — never more than requested
+    assert len(report.substitutions) == pool_size
+    assert len(report.unfilled) == n_fail - pool_size
+    assert topo.size == n - len(report.unfilled)
+    for lg in topo.legions:
+        assert lg.master == min(lg.members)
+
+
+def test_strict_mode_raises_on_exhaustion():
+    topo = LegionTopology.build(list(range(8)), 4)
+    eng = SubstituteEngine(sub_policy())
+    with pytest.raises(SparePoolExhausted):
+        eng.repair(topo, {3}, SparePool(capacity=0))
+    # nothing was mutated by the refused repair
+    assert topo.size == 8
+
+
+def test_master_substitution_promotes_survivor_not_spare():
+    """Spare ids are above every initial id, so the lowest-rank master rule
+    promotes a surviving original member, never the fresh spare."""
+    topo = LegionTopology.build(list(range(16)), 4)
+    eng = SubstituteEngine(sub_policy())
+    pool = SparePool(capacity=1, available=[16])
+    report = eng.repair(topo, {4}, pool)          # 4 = master of legion 1
+    assert report.master_failed
+    lg = topo.legion_of(16)
+    assert lg.index == 1 and lg.master == 5
+    ops = [s.op for s in report.steps]
+    assert "substitute" in ops and "restore" in ops and "promote" in ops
+
+
+def test_whole_legion_death_keeps_slot_in_ring():
+    """Under shrink an emptied legion leaves the ring; under substitution
+    the spare keeps the slot alive at its original ring position."""
+    topo = LegionTopology.build(list(range(6)), 2)
+    eng = SubstituteEngine(sub_policy(legion_size=2))
+    pool = SparePool(capacity=2, available=[6, 7])
+    eng.repair(topo, {2, 3}, pool)
+    assert [lg.index for lg in topo.legions] == [0, 1, 2]
+    assert topo.legion_of(6).index == 1 and topo.legion_of(7).index == 1
+    assert topo.successor(0).index == 1
+
+
+def test_expand_recreates_compacted_legion_in_ring_order():
+    topo = LegionTopology.build(list(range(6)), 2)
+    topo.remove(2)
+    topo.remove(3)
+    topo.compact()
+    assert [lg.index for lg in topo.legions] == [0, 2]
+    topo.expand(1, 6)
+    assert [lg.index for lg in topo.legions] == [0, 1, 2]
+    assert topo.legion_of(6).master == 6
+    assert topo.successor(0).index == 1
+
+
+def test_assignment_finality_enforced():
+    topo = LegionTopology.build(list(range(8)), 4)
+    topo.substitute(5, 8)
+    with pytest.raises(ValueError):
+        topo.substitute(6, 8)          # 8 already assigned — final
+    with pytest.raises(ValueError):
+        topo.expand(0, 8)
+
+
+# ---------------------------------------------------------------------------
+# batch plan: capacity hand-over and dropped-shard return
+# ---------------------------------------------------------------------------
+
+def test_substitute_assign_moves_shards_wholesale():
+    plan = initial_assignment(list(range(4)), 2)
+    out = substitute_assign(plan, {1: 4})
+    assert out.shards_of(4) == plan.shards_of(1)
+    assert out.shards_of(1) == ()
+    assert out.active_shards == 8 and out.dropped_shards == ()
+
+
+def test_restore_rank_returns_dropped_shards():
+    plan = initial_assignment(list(range(4)), 2)
+    plan = reassign(plan, {1}, "drop")
+    assert plan.dropped_shards == (2, 3)
+    out = restore_rank(plan, 4)
+    assert out.shards_of(4) == (2, 3)
+    assert out.dropped_shards == () and out.active_shards == 8
+
+
+def test_restore_rank_disjoint_claim_never_erases_dropped_record():
+    """A claim that misses the dropped pool must not wipe the record of
+    shards dropped for other failures — they stay dropped."""
+    plan = initial_assignment(list(range(4)), 2)
+    plan = reassign(plan, {1}, "drop")
+    out = restore_rank(plan, 4, shards=())
+    assert out.dropped_shards == (2, 3)        # other failure's drops intact
+    all_shards = sorted(s for a in out.assignments for s in a.shards)
+    assert all_shards == [0, 1, 4, 5, 6, 7]    # nothing duplicated or lost
+
+
+def test_restore_rank_pulls_back_from_rebalance():
+    plan = initial_assignment(list(range(4)), 2)
+    plan = reassign(plan, {1}, "rebalance")
+    assert plan.dropped_shards == ()
+    out = restore_rank(plan, 4)
+    sizes = [len(a.shards) for a in out.assignments]
+    assert sum(sizes) == 8 and max(sizes) - min(sizes) <= 1
+    all_shards = sorted(s for a in out.assignments for s in a.shards)
+    assert all_shards == list(range(8))          # nothing lost, no dupes
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: substitute restores capacity, shrink stays degraded
+# ---------------------------------------------------------------------------
+
+def test_e2e_substitute_restores_capacity_shrink_stays_degraded():
+    """The acceptance scenario: same fault, two recovery modes. Substitute
+    returns to the pre-fault node count and per-step throughput (full
+    reduce); shrink continues with one node fewer."""
+    full = sum(range(1, 17))
+
+    def run(mode):
+        inj = FaultInjector.at([(2, 5)])
+        pol = sub_policy(recovery_mode=mode) if mode != "shrink" \
+            else LegioPolicy(legion_size=4)
+        cl = VirtualCluster(16, policy=pol, injector=inj)
+        ex = LegioExecutor(cl, work)
+        return cl, ex.run(5)
+
+    cl_shrink, rep_shrink = run("shrink")
+    assert cl_shrink.topo.size == 15
+    assert rep_shrink[3].reduced[0] == full - 6          # shard 5 dropped
+    assert rep_shrink[3].grad_scale == pytest.approx(16 / 15)
+
+    cl_sub, rep_sub = run("substitute")
+    assert rep_sub[2].repair.mode == "substitute"
+    assert rep_sub[2].repair.substitutions == ((5, 16),)
+    assert cl_sub.topo.size == 16                        # node count restored
+    assert cl_sub.plan.active_shards == 16               # throughput restored
+    assert rep_sub[3].reduced[0] == full                 # full per-step reduce
+    assert rep_sub[3].grad_scale == 1.0
+    # transparency held either way: no step raised, reports kept coming
+    assert [r.step for r in rep_sub] == list(range(5))
+
+
+def test_e2e_nonblocking_runs_shrunk_then_reexpands():
+    inj = FaultInjector.at([(2, 5)])
+    pol = sub_policy(recovery_mode="substitute_then_shrink",
+                     nonblocking_substitution=True, spare_warmup_steps=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(6)
+    full = sum(range(1, 17))
+    # fault step: shrink repair, the spare is still warming up
+    assert reports[2].repair.mode == "substitute(nonblocking)"
+    assert reports[2].repair.survivors == 15
+    # warmup step genuinely runs shrunk — repair overlapped useful work
+    assert reports[3].expanded == ()
+    assert reports[3].reduced[0] == full - 6             # shard 5 dropped
+    assert reports[3].grad_scale == pytest.approx(16 / 15)
+    # next boundary: topology re-expanded, spare adopted the dropped shard
+    assert reports[4].expanded == ((5, 16),)
+    assert cl.pending == []
+    assert cl.topo.size == 16
+    assert reports[4].reduced[0] == full
+    assert cl.plan.active_shards == 16
+
+
+def test_fault_step_grad_scale_renormalizes_over_computed_shards():
+    """At the fault step the spliced spare has not computed yet — the
+    gradient renormalizes over the 15 shards that actually contributed,
+    even though the post-repair plan already shows 16."""
+    inj = FaultInjector.at([(2, 5)])
+    cl = VirtualCluster(16, policy=sub_policy(), injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(4)
+    assert cl.plan.active_shards == 16
+    assert reports[2].grad_scale == pytest.approx(16 / 15)  # fault step
+    assert reports[3].grad_scale == 1.0                     # spare computes
+
+
+def test_nonblocking_strict_refuses_before_mutating():
+    """Strict mode with an undersized pool must raise without shrinking the
+    topology, consuming spares, or recording a repair — same invariant the
+    blocking engine enforces."""
+    inj = FaultInjector.at([(0, 1), (0, 2)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute",
+                      nonblocking_substitution=True, spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    with pytest.raises(SparePoolExhausted):
+        ex.run_step()
+    assert cl.topo.size == 16
+    assert len(cl.spare_pool) == 1 and cl.pending == []
+    assert cl.repairs == []
+
+
+def test_nonblocking_splice_returns_only_own_shards():
+    """Two failures, one spare, DROP: the splice returns the substituted
+    node's shard only — the unfilled failure's shard stays dropped, so the
+    plan honestly reports the degraded capacity."""
+    inj = FaultInjector.at([(1, 1), (1, 2)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      nonblocking_substitution=True, spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(5)
+    # exhausted at the fault step -> the report says so
+    assert reports[1].repair.mode == "substitute_then_shrink"
+    assert reports[3].expanded == ((1, 16),)   # after the 1-step warmup
+    assert cl.plan.shards_of(16) == (1,)
+    assert cl.plan.dropped_shards == (2,)      # node 2's shard stays dropped
+    assert cl.plan.active_shards == 15 and cl.topo.size == 15
+
+
+def test_e2e_strict_substitute_raises_when_exhausted():
+    inj = FaultInjector.at([(0, 1), (1, 2)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute", spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run_step()
+    with pytest.raises(SparePoolExhausted):
+        ex.run_step()
+
+
+def test_e2e_then_shrink_degrades_when_exhausted():
+    inj = FaultInjector.at([(0, 1), (1, 2)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(3)
+    assert reports[0].repair.substitutions == ((1, 16),)
+    assert reports[1].repair.mode == "substitute_then_shrink"
+    assert reports[1].repair.unfilled == (2,)
+    assert cl.topo.size == 15                            # degraded, alive
+    assert reports[2].reduced is not None
+
+
+def test_fault_on_warm_spare_is_not_lost():
+    """A configured fault targeting a warm spare must be honored: the dead
+    spare leaves the pool and is never spliced in."""
+    inj = FaultInjector.at([(1, 16), (2, 5)])  # kill spare 16, then node 5
+    cl = VirtualCluster(16, policy=sub_policy(), injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(5)
+    assert 16 in cl.failed and 16 not in cl.spare_pool.available
+    # the repair used the NEXT spare, not the dead one
+    assert reports[2].repair.substitutions == ((5, 17),)
+    assert 16 not in cl.topo.nodes and cl.topo.size == 16
+
+
+def test_fault_on_warming_pending_spare_reschedules_on_next():
+    """The warming spare dies: the splice restarts on the next warm spare
+    with a fresh warmup; the dead spare is never installed."""
+    inj = FaultInjector.at([(1, 5), (2, 16)])  # node 5 dies; its warming
+    pol = sub_policy(recovery_mode="substitute_then_shrink",  # spare dies too
+                     nonblocking_substitution=True, spare_warmup_steps=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(6)
+    assert reports[1].repair.mode == "substitute(nonblocking)"
+    assert reports[4].expanded == ((5, 17),)   # replacement, re-warmed
+    assert 16 not in cl.topo.nodes and cl.topo.size == 16
+
+
+def test_fault_on_warming_spare_with_empty_pool_stays_shrunk():
+    inj = FaultInjector.at([(1, 5), (2, 16)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      nonblocking_substitution=True, spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(5)
+    assert cl.pending == [] and all(r.expanded == () for r in reports)
+    assert cl.topo.size == 15                  # then_shrink: degrade quietly
+
+
+def test_fault_on_warming_spare_strict_mode_raises():
+    """Strict substitute semantics: losing the last spare mid-warmup is
+    exhaustion, not silent degradation."""
+    inj = FaultInjector.at([(1, 5), (2, 16)])
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute",
+                      nonblocking_substitution=True, spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol, injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run_step()
+    ex.run_step()
+    with pytest.raises(SparePoolExhausted):
+        ex.run_step()                          # step 2: the warming spare dies
+
+
+def test_e2e_checkpoint_backed_restoration(tmp_path):
+    """The substituted rank restores the dead member's state shard —
+    restart-only-failed via checkpoint/store.py."""
+    ck = LegionCheckpointer(str(tmp_path), async_writes=False)
+    inj = FaultInjector.at([(3, 5)])
+    cl = VirtualCluster(16, policy=sub_policy(), injector=inj, checkpointer=ck)
+    ex = LegioExecutor(cl, work)
+    ex.run(2)
+    state = {n: {"w": np.full((2,), float(n))} for n in cl.topo.nodes}
+    ck.save(2, cl.topo, lambda n: state[n], sync=True)
+    ex.run(3)
+    assert cl.repairs[-1].substitutions == ((5, 16),)
+    restored = cl.restored_state[16]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((2,), 5.0))
+    assert ck.restarts and ck.restarts[-1].node == 5
+
+
+def test_trainer_substitution_keeps_full_batch():
+    from repro.configs.base import ModelConfig, TrainConfig
+    from repro.core import ResilientTrainer
+
+    tiny = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
+        attn_block_q=16, attn_block_k=16, xent_chunk=16, remat="none",
+        param_dtype="float32", dtype="float32",
+    )
+    tc = TrainConfig(learning_rate=3e-2, total_steps=10, warmup_steps=2,
+                     grad_clip=1.0)
+    inj = FaultInjector.at([(3, 1)])
+    cl = VirtualCluster(4, policy=LegioPolicy(
+        recovery_mode="substitute", spare_nodes=1), injector=inj)
+    tr = ResilientTrainer(tiny, tc, cl, per_shard_batch=2, seq_len=32)
+    reports = tr.run(6)
+    assert reports[3].repair is not None
+    assert reports[3].repair.substitutions == ((1, 4),)
+    # capacity preserved: every step keeps the full shard count
+    assert all(r.active_shards == 4 for r in reports)
+    assert np.isfinite(reports[-1].loss)
