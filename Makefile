@@ -3,10 +3,14 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-quick bench install-dev
+.PHONY: test lint bench-quick bench install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# ruff (config in pyproject.toml); CI's lint job runs exactly this
+lint:
+	$(PYTHON) -m ruff check src/repro/core tests benchmarks examples
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
 bench-quick:

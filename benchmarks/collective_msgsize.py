@@ -20,7 +20,7 @@ from repro.core.collectives import (
     flat_collective_time,
 )
 from repro.core.hierarchy import LegionTopology
-from repro.core.policy import LegioPolicy, optimal_k_linear
+from repro.core.policy import optimal_k_linear
 
 N_RANKS = 32
 SIZES = [2 ** p for p in range(4, 23, 2)]       # 16 B .. 4 MiB

@@ -13,14 +13,11 @@ dead nodes' slices missing (the paper's DROP trade-off).
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.core import FaultInjector, LegioPolicy, VirtualCluster
 from repro.launch.serve import ResilientServer
-from repro.models import api
 
 
 def main() -> None:

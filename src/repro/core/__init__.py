@@ -1,15 +1,17 @@
 """Legio core — the paper's contribution as a composable JAX runtime.
 
 Layering (paper section -> module):
-  §V  hierarchy      legions / masters / POVs / ring
+  §V  hierarchy      legions / masters / POVs / ring, topology epochs + views
   §III detector      heartbeats, noticing semantics (BNP), stragglers
   §IV agreement      fault agreement (BNP fix), in-program bitmap psum
+  §IV pipeline       detect → notice → agree → plan → apply fault pipeline
+  —   strategy       RecoveryStrategy registry (shrink / substitute / …)
   §V  shrink         S(x) cost model, Eq. 1-4, Fig. 3 repair plans
-  —   substitute     warm spare pool, slot-preserving substitution repair
+  —   substitute     warm spare pool, substitution repair, elastic provisioner
   §V  collectives    hierarchical op schedules + shard_map psum variants
   §IV batch          DROP / REBALANCE shard reassignment
   —   mesh_manager   survivors -> jax.Mesh, reshard, compile cache
-  §IV executor       transparent run -> detect -> agree -> repair loop
+  §IV executor       transparent orchestration draining the pipeline
   §VII cr            per-legion C/R, restart-only-failed
   —   trainer        SPMD resilient training integration
 """
@@ -21,6 +23,7 @@ from repro.core.batch import (
     reassign,
     restore_rank,
     substitute_assign,
+    validate_plan,
 )
 from repro.core.collectives import (
     HierarchicalCollectives,
@@ -44,8 +47,15 @@ from repro.core.executor import (
     StepReport,
     VirtualCluster,
 )
-from repro.core.hierarchy import Legion, LegionTopology, make_topology
+from repro.core.hierarchy import (
+    Legion,
+    LegionTopology,
+    TopologyTornError,
+    TopologyView,
+    make_topology,
+)
 from repro.core.mesh_manager import CompileCache, DevicePool, MeshManager
+from repro.core.pipeline import FaultPipeline
 from repro.core.policy import (
     LegioPolicy,
     eq3_s_of_k,
@@ -54,38 +64,58 @@ from repro.core.policy import (
     optimal_k_quadratic,
 )
 from repro.core.shrink import ShrinkCostModel, ShrinkEngine, failures_by_legion
+from repro.core.strategy import (
+    NonblockingSubstituteStrategy,
+    RecoveryStrategy,
+    ShrinkStrategy,
+    SubstituteStrategy,
+    available_strategies,
+    make_strategy,
+    register_strategy,
+)
 from repro.core.substitute import (
     PendingSubstitution,
     SparePool,
     SparePoolExhausted,
+    SpareProvisioner,
     SubstituteCostModel,
     SubstituteEngine,
+    UnfilledSlot,
     restore_for_substitute,
 )
 from repro.core.trainer import ResilientTrainer, TrainerReport, make_train_step
 from repro.core.types import (
     FailureEvent,
     FailureKind,
+    FaultEvent,
+    FaultSource,
     NodeState,
     OpStatus,
+    PipelineTrace,
+    RecoveryAction,
     RepairReport,
     RepairStep,
 )
 
 __all__ = [
     "BatchPlan", "CompileCache", "DevicePool", "FailureEvent", "FailureKind",
-    "FaultInjector", "HeartbeatDetector", "HierarchicalCollectives",
+    "FaultEvent", "FaultInjector", "FaultPipeline", "FaultSource",
+    "HeartbeatDetector", "HierarchicalCollectives",
     "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
-    "LegioPolicy", "LinkModel", "MeshManager", "NodeState", "OpStatus",
-    "PendingSubstitution", "RepairReport", "RepairStep", "ResilientTrainer",
-    "RootFailedError", "ShrinkCostModel", "ShrinkEngine", "SparePool",
-    "SparePoolExhausted", "StepReport", "StragglerDetector",
-    "SubstituteCostModel", "SubstituteEngine", "TrainerReport",
-    "VirtualCluster", "agree_fault", "agreement_rounds",
-    "agreement_time", "failures_by_legion", "flat_collective_time",
+    "LegioPolicy", "LinkModel", "MeshManager", "NodeState",
+    "NonblockingSubstituteStrategy", "OpStatus", "PendingSubstitution",
+    "PipelineTrace", "RecoveryAction", "RecoveryStrategy", "RepairReport",
+    "RepairStep", "ResilientTrainer", "RootFailedError", "ShrinkCostModel",
+    "ShrinkEngine", "ShrinkStrategy", "SparePool", "SparePoolExhausted",
+    "SpareProvisioner", "StepReport", "StragglerDetector",
+    "SubstituteCostModel", "SubstituteEngine", "SubstituteStrategy",
+    "TopologyTornError", "TopologyView", "TrainerReport", "UnfilledSlot",
+    "VirtualCluster", "agree_fault", "agreement_rounds", "agreement_time",
+    "available_strategies", "failures_by_legion", "flat_collective_time",
     "gradient_scale", "hierarchical_psum", "hierarchical_psum_scatter",
     "initial_assignment", "liveness_psum", "make_hierarchical_allreduce",
-    "make_topology", "make_train_step", "notice_fault", "optimal_k_linear",
-    "optimal_k_quadratic", "eq3_s_of_k", "eq4_s_of_k", "reassign",
-    "restore_for_substitute", "restore_rank", "substitute_assign",
+    "make_strategy", "make_topology", "make_train_step", "notice_fault",
+    "optimal_k_linear", "optimal_k_quadratic", "eq3_s_of_k", "eq4_s_of_k",
+    "reassign", "register_strategy", "restore_for_substitute", "restore_rank",
+    "substitute_assign", "validate_plan",
 ]

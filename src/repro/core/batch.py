@@ -137,6 +137,29 @@ def restore_rank(plan: BatchPlan, node: int,
     )
 
 
+def validate_plan(plan: BatchPlan, view) -> None:
+    """Cross-check a batch plan against a :class:`TopologyView` snapshot —
+    the structural half of the epoch discipline: at the moment a collective
+    reads the topology, every assigned node must exist in the snapshot and
+    no shard may be double-assigned or simultaneously assigned and dropped.
+    Raises ``ValueError`` on the first violation."""
+    nodes = set(view.nodes)
+    seen: set[int] = set()
+    for a in plan.assignments:
+        if a.node not in nodes:
+            raise ValueError(
+                f"plan assigns shards to node {a.node} which is not in the "
+                f"topology snapshot (epoch {getattr(view, 'epoch', '?')})")
+        dup = seen.intersection(a.shards)
+        if dup:
+            raise ValueError(f"shards {sorted(dup)} assigned twice")
+        seen.update(a.shards)
+    overlap = seen.intersection(plan.dropped_shards)
+    if overlap:
+        raise ValueError(
+            f"shards {sorted(overlap)} both assigned and dropped")
+
+
 def gradient_scale(plan: BatchPlan, total_shards: int) -> float:
     """Weight for the gradient mean so the estimator renormalizes over the
     shards actually computed (DROP shrinks the denominator)."""

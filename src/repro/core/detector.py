@@ -57,6 +57,16 @@ class HeartbeatDetector:
     def suspects(self) -> list[int]:
         return sorted(n for n, s in self.states.items() if s == NodeState.SUSPECT)
 
+    def suspicions(self, now: float, within: list[int]) -> tuple[int, ...]:
+        """Pipeline detect-stage entry point: advance the sweep to ``now``
+        and return every currently-SUSPECT node among ``within`` (newly
+        suspect or still unresolved from an earlier sweep). Suspicion is
+        local knowledge — the caller feeds it to agreement, never straight
+        to repair."""
+        self.sweep(now)
+        members = set(within)
+        return tuple(n for n in self.suspects() if n in members)
+
     def healthy(self) -> list[int]:
         return sorted(n for n, s in self.states.items() if s == NodeState.HEALTHY)
 

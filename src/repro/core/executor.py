@@ -4,65 +4,65 @@ PMPI interposition has no JAX analogue at the call level; the equivalent
 *seam* is the step boundary: applications hand the executor a per-shard work
 function and the executor owns everything Legio owns in MPI — substitute
 structures (the legion topology standing in for the application's
-communicator), post-collective error checking, agreement, repair, and
-shard reassignment. Application code never sees a fault.
+communicator), fault detection, agreement, repair, and shard reassignment.
+Application code never sees a fault.
 
-Per step:
-  1. run every live node's shard work (EP: no interaction until the final
-     collective — exactly the paper's target class);
-  2. the step-final collective (reduce of results / gradient psum) runs on
-     the substitute topology; injected faults surface there, with
-     bcast-shaped ops noticing only partially (BNP, detector.notice_fault);
-  3. agreement unifies the survivors' verdicts (agreement.agree_fault);
-  4. the shrink engine repairs the topology (flat or hierarchical per
-     policy), masters are re-elected, and the batch plan is reassigned
-     (DROP / REBALANCE);
-  5. if the op's root died: IGNORE (skip, buffers unchanged) or STOP
-     (raise) per ``policy.root_failure_policy`` — the paper's compile-time
-     knob, here a config value.
+Recovery is an event-driven pipeline (core/pipeline.py), not an in-line
+procedure: every fault signal — collective PROC_FAILED observations,
+heartbeat timeouts, straggler soft-fails — flows through explicit
+detect → notice → agree → plan → apply stages, and the repair itself is a
+registered RecoveryStrategy (core/strategy.py) selected by the policy.
+``run_step`` is orchestration only:
 
-Straggler mitigation (beyond-paper): step latencies feed a
-StragglerDetector; flagged nodes are soft-failed through the *same* repair
-path (FailureKind.STRAGGLE) — the paper's discard semantics applied to
-performance faults.
+  1. step boundary: the SpareProvisioner delivers re-spawned spares (elastic
+     refill, the MPI_Comm_spawn analogue) and warmed-up non-blocking
+     substitutes rejoin;
+  2. per-node shard work (EP: no interaction until the final collective);
+  3. the pipeline drains the collective + heartbeat channels — the agreed
+     verdict is repaired by the active strategy BEFORE the op re-runs
+     (paper §IV: check after the op; if confirmed repair, repeat);
+  4. the step-final collective runs against a pinned TopologyView snapshot —
+     a mid-pipeline repair can never tear the structure the collective is
+     reading (TopologyTornError if anything tries);
+  5. the pipeline drains the straggler channel (soft-fails routed through
+     the same strategies — the paper's discard semantics applied to
+     performance faults), and the StepReport surfaces every action.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import numpy as np
 
-from repro.core.agreement import agree_fault
 from repro.core.batch import (
     BatchPlan,
     initial_assignment,
-    reassign,
     restore_rank,
-    substitute_assign,
+    validate_plan,
 )
 from repro.core.collectives import HierarchicalCollectives, LinkModel
-from repro.core.detector import (
-    FaultInjector,
-    HeartbeatDetector,
-    StragglerDetector,
-    notice_fault,
-)
-from repro.core.hierarchy import LegionTopology, make_topology
+from repro.core.detector import FaultInjector, HeartbeatDetector, StragglerDetector
+from repro.core.hierarchy import LegionTopology, TopologyView, make_topology
+from repro.core.pipeline import FaultPipeline
 from repro.core.policy import LegioPolicy
 from repro.core.shrink import ShrinkEngine
+from repro.core.strategy import RecoveryStrategy, make_strategy
 from repro.core.substitute import (
     PendingSubstitution,
     SparePool,
+    SparePoolExhausted,
+    SpareProvisioner,
     SubstituteEngine,
+    UnfilledSlot,
     restore_for_substitute,
 )
 from repro.core.types import (
     ClusterClock,
     FailureEvent,
-    FailureKind,
-    NodeState,
+    FaultSource,
+    RecoveryAction,
     RepairReport,
     RepairStep,
 )
@@ -77,13 +77,15 @@ class StepReport:
     step: int
     results: dict[int, Any]                  # node -> shard work output
     reduced: Any | None                      # step-final collective output
-    failed_now: tuple[int, ...] = ()
-    repair: RepairReport | None = None
+    failed_now: tuple[int, ...] = ()         # every node repaired this step
+    repair: RepairReport | None = None       # first crash repair (back-compat)
+    actions: tuple[RecoveryAction, ...] = () # all terminal pipeline actions
     skipped_op: bool = False                 # IGNORE policy fired
     sim_collective_seconds: float = 0.0
     wall_seconds: float = 0.0
     grad_scale: float = 1.0
     expanded: tuple[tuple[int, int], ...] = ()  # non-blocking splices applied
+    respawned: tuple[int, ...] = ()          # provisioner deliveries this step
 
 
 class VirtualCluster:
@@ -111,13 +113,18 @@ class VirtualCluster:
         self.straggler = StragglerDetector(threshold=self.policy.straggler_threshold)
         self.shrink = ShrinkEngine(self.policy)
         self.substitute = SubstituteEngine(self.policy)
+        self.strategy: RecoveryStrategy = make_strategy(self.policy)
         self.clock = ClusterClock()
         self.failed: set[int] = set()            # ground truth (hidden from app)
         self.plan: BatchPlan = initial_assignment(self.nodes, shards_per_node)
         self.shards_per_node = shards_per_node
         self.total_shards = n_nodes * shards_per_node
         self.spare_pool = SparePool.provision(n_nodes, self.policy)
+        self.provisioner = SpareProvisioner.for_pool(
+            n_nodes, self.spare_pool, self.policy)
+        self.backlog: list[UnfilledSlot] = []    # shrunk slots awaiting refill
         self.pending: list[PendingSubstitution] = []
+        self.pipeline = FaultPipeline(self)
         self.checkpointer = checkpointer
         self.restored_state: dict[int, Any] = {}  # this step's splices only
         self._restored_step = -1
@@ -155,6 +162,8 @@ class VirtualCluster:
                         1, self.policy.recovery_mode == "substitute")
                     replacement = self.spare_pool.take()
                     if replacement is None:
+                        self.note_unfilled(UnfilledSlot(
+                            failed=p.failed, legion=p.legion, shards=p.shards))
                         continue
                     self.pending.append(PendingSubstitution(
                         failed=p.failed, spare=replacement, legion=p.legion,
@@ -162,9 +171,10 @@ class VirtualCluster:
                         shards=p.shards))
         return events
 
-    def collectives(self) -> HierarchicalCollectives:
+    def collectives(self, view: TopologyView | None = None
+                    ) -> HierarchicalCollectives:
         return HierarchicalCollectives(
-            self.topo, self.link,
+            view if view is not None else self.topo, self.link,
             compression=self.policy.grad_compression,
             topk_fraction=self.policy.topk_fraction,
             residuals=self.compress_residuals)
@@ -173,7 +183,7 @@ class VirtualCluster:
     def live_nodes(self) -> list[int]:
         return [n for n in self.topo.nodes if n not in self.failed]
 
-    # -- repair -------------------------------------------------------------------
+    # -- repair (strategy dispatch) -------------------------------------------
 
     def _note_restored(self, spare: int, state: Any) -> None:
         """Record a splice's restored state, evicting previous steps' entries
@@ -185,100 +195,39 @@ class VirtualCluster:
             self._restored_step = self._step
         self.restored_state[spare] = state
 
+    def note_unfilled(self, slot: UnfilledSlot) -> None:
+        """Remember a slot shrunk for lack of spares so the provisioner can
+        heal it once replacements come up (no-op without elastic spares)."""
+        if self.provisioner.enabled:
+            self.backlog.append(slot)
+
     def repair(self, verdict: set[int]) -> RepairReport | None:
+        """Apply the registered RecoveryStrategy for the agreed verdict.
+
+        The strategy mutates the structures; this method owns the
+        bookkeeping every strategy shares: detector confirmation, straggler
+        eviction, clock charge, and the repair record. A strategy that
+        raises after committing work (non-blocking strict exhaustion)
+        attaches the committed report as ``partial_report`` — it is recorded
+        before the error propagates, so the campaign log stays truthful.
+        """
         if not verdict:
             return None
-        if self.policy.substitution_enabled \
-                and not self.policy.nonblocking_substitution:
-            report = self._repair_substitute(verdict)
-        elif self.policy.substitution_enabled:
-            report = self._repair_nonblocking(verdict)
-        else:
-            report = self._repair_shrink(verdict)
+        try:
+            report = self.strategy.repair(self, set(verdict))
+        except SparePoolExhausted as exc:
+            if exc.partial_report is not None:
+                self._commit_repair(verdict, exc.partial_report)
+            raise
+        self._commit_repair(verdict, report)
+        return report
+
+    def _commit_repair(self, verdict: set[int], report: RepairReport) -> None:
         for n in verdict:
             self.detector.confirm_failed(n)
             self.straggler.drop(n)
         self.clock.charge(report.model_cost)
         self.repairs.append(report)
-        return report
-
-    def _repair_substitute(self, verdict: set[int]) -> RepairReport:
-        """Blocking substitution: splice spares in during the repair itself;
-        the substituted ranks compute from the next step."""
-        report = self.substitute.repair(self.topo, verdict, self.spare_pool)
-        for failed, spare in report.substitutions:
-            self.detector.register(spare)
-            self._note_restored(spare, restore_for_substitute(
-                self.checkpointer, self.topo.home[spare], failed))
-        self.plan = substitute_assign(self.plan, report.substitution_map)
-        if report.unfilled:
-            self.plan = reassign(self.plan, set(report.unfilled),
-                                 self.policy.batch_policy)
-        return report
-
-    def _repair_nonblocking(self, verdict: set[int]) -> RepairReport:
-        """Non-blocking substitution: repair by shrink now (the next step
-        runs degraded), schedule the splice for after the spare's warmup."""
-        homes = {n: self.topo.home[n] for n in verdict
-                 if n in self.topo.home and n in self.topo.nodes}
-        self.spare_pool.require(len(homes),
-                                self.policy.recovery_mode == "substitute")
-        # each pending splice returns exactly the failed node's own shards
-        owned = {n: self.plan.shards_of(n) for n in homes}
-        report = self._repair_shrink(verdict, regrow=False)
-        scheduled = 0
-        for node, legion in sorted(homes.items()):
-            spare = self.spare_pool.take()
-            if spare is None:
-                break  # substitute_then_shrink: stay shrunk
-            scheduled += 1
-            # the fault step itself ran degraded; spare_warmup_steps MORE
-            # steps run shrunk before the splice lands at a boundary
-            self.pending.append(PendingSubstitution(
-                failed=node, spare=spare, legion=legion,
-                ready_step=self._step + 1 + self.policy.spare_warmup_steps,
-                shards=owned[node]))
-        report.mode = ("substitute(nonblocking)" if scheduled == len(homes)
-                       else "substitute_then_shrink")
-        return report
-
-    def _repair_shrink(self, verdict: set[int], *,
-                       regrow: bool = True) -> RepairReport:
-        report = self.shrink.repair(self.topo, verdict)
-        # elastic regrow: pull spares into the smallest legion (beyond-paper;
-        # predates slot-preserving substitution — kept for recovery_mode=
-        # "shrink" with a provisioned pool)
-        grown = []
-        while regrow and self.spares and self.topo.size < self.n_initial:
-            spare = self.spare_pool.take()
-            target = min((lg for lg in self.topo.legions if lg.members),
-                         key=len, default=None)
-            if target is None:
-                self.topo = make_topology([spare], self.policy)
-            else:
-                target.members.append(spare)
-                target.members.sort()
-                self.topo.home[spare] = target.index
-            self.detector.register(spare)
-            grown.append(spare)
-        if grown:
-            report.steps.append(RepairStep(
-                op="include", comm="world", participants=tuple(grown),
-                cost_units=0.0))
-        self.plan = reassign(self.plan, verdict, self.policy.batch_policy)
-        if grown:
-            # new members take over dropped shards (restart-only-failed)
-            extra = initial_assignment(grown, self.shards_per_node)
-            take = list(self.plan.dropped_shards)
-            new_assignments = list(self.plan.assignments)
-            for a in extra.assignments:
-                shards = tuple(take.pop(0) for _ in a.shards if take)
-                new_assignments.append(type(a)(node=a.node, shards=shards))
-            self.plan = BatchPlan(
-                assignments=tuple(new_assignments),
-                dropped_shards=tuple(take),
-                policy=self.plan.policy)
-        return report
 
     # -- deferred (non-blocking) substitution --------------------------------
 
@@ -296,7 +245,7 @@ class VirtualCluster:
         for p in ready:
             t0 = time.perf_counter()
             self.topo.expand(p.legion, p.spare)
-            self.detector.register(p.spare)
+            self.detector.register(p.spare, self.clock.sim_seconds)
             self._note_restored(p.spare, restore_for_substitute(
                 self.checkpointer, p.legion, p.failed))
             self.plan = restore_rank(self.plan, p.spare, shards=p.shards)
@@ -320,6 +269,30 @@ class VirtualCluster:
             reports.append(report)
         return reports
 
+    # -- elastic spare re-spawn (provisioner stage) ---------------------------
+
+    def poll_provisioner(self, step: int) -> list[int]:
+        """Provisioner boundary stage: deliver due replacement spares, then
+        feed refilled capacity back into slots shrunk during exhaustion —
+        each healed slot goes through the same pending-splice path as a
+        non-blocking substitution (warmup included), so assignment finality
+        and master rules hold by construction."""
+        if not self.provisioner.enabled:
+            return []
+        delivered = self.provisioner.poll(step)
+        while self.backlog and self.spare_pool.available:
+            slot = self.backlog.pop(0)
+            spare = self.spare_pool.take()
+            self.pending.append(PendingSubstitution(
+                failed=slot.failed, spare=spare, legion=slot.legion,
+                ready_step=step + self.policy.spare_warmup_steps,
+                shards=slot.shards))
+        # the backlog may have drained what poll() just delivered — re-check
+        # the watermark now so replacement provisioning overlaps the healing
+        # splices' warmup instead of losing a boundary
+        self.provisioner.refill(step)
+        return delivered
+
 
 class LegioExecutor:
     """Runs per-shard work under transparent fault resiliency."""
@@ -339,6 +312,85 @@ class LegioExecutor:
         self.final_collective = final_collective
         self.root = root
         self.step_count = 0
+        self._skip_op = False
+
+    # -- pipeline hooks -----------------------------------------------------------
+
+    def _root_gate(self, verdict: set[int]) -> None:
+        """Runs between agree and apply: the paper's root-failure knob.
+        STOP raises before any repair mutates state; IGNORE marks the op
+        skipped (buffers unchanged) and lets the repair proceed."""
+        if self.root in verdict and self.final_collective in ("bcast", "reduce"):
+            if self.cluster.policy.root_failure_policy == "stop":
+                raise RootFailedError(
+                    f"root node {self.root} failed at step "
+                    f"{self.cluster._step}")
+            self._skip_op = True
+
+    # -- step phases --------------------------------------------------------------
+
+    def _work_phase(self, step: int) -> tuple[dict[int, Any], int]:
+        """Per-node shard work; every live node heartbeats (idle nodes too —
+        liveness is not throughput)."""
+        cl = self.cluster
+        results: dict[int, Any] = {}
+        computed_shards = 0
+        for node in cl.live_nodes:
+            cl.detector.beat(node, cl.clock.sim_seconds)
+            shards = cl.plan.shards_of(node)
+            if not shards:
+                continue
+            t0 = time.perf_counter()
+            out = [self.work_fn(node, s, step) for s in shards]
+            results[node] = out[0] if len(out) == 1 else _sum_results(out)
+            computed_shards += len(shards)
+            cl.straggler.observe(node, time.perf_counter() - t0)
+        return results, computed_shards
+
+    def _fault_phase(self, step: int,
+                     results: dict[int, Any]) -> list[RecoveryAction]:
+        """Feed the collective channel and drain the crash channels.
+        Paper §IV: presence of fault is checked AFTER the op; if confirmed
+        repair, then repeat the operation — so the drain (and its repairs)
+        lands before the collective re-runs on the repaired topology."""
+        cl = self.cluster
+        self._skip_op = False
+        if self.final_collective != "none" and results:
+            op_kind = "bcast" if self.final_collective == "bcast" else "allreduce"
+            failed_in_topo = {n for n in cl.topo.nodes if n in cl.failed}
+            cl.pipeline.observe_collective(op_kind, cl.topo.nodes,
+                                           failed_in_topo, root=self.root)
+        return cl.pipeline.drain(
+            step, sources=(FaultSource.COLLECTIVE, FaultSource.HEARTBEAT),
+            gate=self._root_gate)
+
+    def _collective_phase(self, results: dict[int, Any]
+                          ) -> tuple[Any, float]:
+        """Run the step-final collective against a pinned TopologyView —
+        the repaired structure is snapshotted and cannot be torn by any
+        mutation while the op is in flight."""
+        cl = self.cluster
+        with cl.topo.pinned() as tv:
+            validate_plan(cl.plan, tv)
+            coll = cl.collectives(tv)
+            contributions = {n: np.asarray(v) for n, v in results.items()
+                             if n in tv.node_set}
+            nodes = tv.nodes
+            if self.final_collective == "allreduce":
+                res = coll.allreduce(contributions, self.reduce_op)
+                reduced = res.data.get(nodes[0]) if nodes else None
+            elif self.final_collective == "reduce":
+                rt = self.root if self.root in tv.node_set else nodes[0]
+                res = coll.reduce(rt, contributions, self.reduce_op)
+                reduced = res.data[rt]
+            elif self.final_collective == "bcast":
+                rt = self.root if self.root in tv.node_set else nodes[0]
+                res = coll.bcast(rt, contributions.get(rt, np.zeros(1)))
+                reduced = res.data[rt]
+            else:
+                return None, 0.0
+        cl.clock.charge(res.sim_seconds)
+        return reduced, res.sim_seconds
 
     # -- one transparent step -----------------------------------------------------
 
@@ -346,86 +398,45 @@ class LegioExecutor:
         cl = self.cluster
         step = self.step_count if step is None else step
         t_start = time.perf_counter()
-        # 0. step boundary: warmed-up non-blocking substitutes rejoin first,
-        #    so the work assignment below already covers the restored slots
+        # 0. step boundary: the provisioner delivers re-spawned spares (and
+        #    reschedules shrunk slots), warmed-up substitutes rejoin, faults
+        #    due this step land in the ground truth, the sim clock ticks
+        respawned = cl.poll_provisioner(step)
         expansions = cl.poll_substitutions(step)
-        events = cl.inject(step)
-        del events  # ground truth is hidden; detection is observational
+        cl.inject(step)
+        cl.clock.charge(cl.policy.step_sim_seconds)
 
         # 1. per-node shard work (only live nodes actually compute)
-        results: dict[int, Any] = {}
-        computed_shards = 0
-        for node in cl.live_nodes:
-            t0 = time.perf_counter()
-            shards = cl.plan.shards_of(node)
-            if not shards:
-                continue
-            out = [self.work_fn(node, s, step) for s in shards]
-            results[node] = out[0] if len(out) == 1 else _sum_results(out)
-            computed_shards += len(shards)
-            cl.straggler.observe(node, time.perf_counter() - t0)
-            cl.detector.beat(node, cl.clock.sim_seconds)
+        results, computed_shards = self._work_phase(step)
 
-        # 2. step-final collective on the substitute topology
-        live_set = cl.live_nodes
-        failed_in_topo = {n for n in cl.topo.nodes if n in cl.failed}
-        reduced = None
-        sim_t = 0.0
-        skipped = False
-        if self.final_collective != "none" and results:
-            op_kind = "bcast" if self.final_collective == "bcast" else "allreduce"
-            noticers = notice_fault(op_kind, cl.topo.nodes, failed_in_topo,
-                                    root=self.root)
-            # 3. BNP agreement: union of suspicion sets over live observers
-            observations = {obs: set(failed_in_topo) for obs in noticers}
-            verdict = agree_fault(observations, live_set)
-            # paper §IV: presence of fault checked AFTER the op; if confirmed
-            # repair, then repeat the operation.
-            if verdict:
-                if self.root in verdict and self.final_collective in ("bcast", "reduce"):
-                    if cl.policy.root_failure_policy == "stop":
-                        raise RootFailedError(
-                            f"root node {self.root} failed at step {step}")
-                    skipped = True  # IGNORE: skip the op, buffers unchanged
-                repair = cl.repair(verdict)
-            else:
-                repair = None
-            if not skipped:
-                coll = cl.collectives()
-                contributions = {n: np.asarray(v) for n, v in results.items()
-                                 if n in cl.topo.nodes}
-                if self.final_collective == "allreduce":
-                    res = coll.allreduce(contributions, self.reduce_op)
-                    reduced = res.data.get(cl.topo.nodes[0]) if cl.topo.nodes else None
-                elif self.final_collective == "reduce":
-                    rt = self.root if self.root in cl.topo.nodes else cl.topo.nodes[0]
-                    res = coll.reduce(rt, contributions, self.reduce_op)
-                    reduced = res.data[rt]
-                elif self.final_collective == "bcast":
-                    rt = self.root if self.root in cl.topo.nodes else cl.topo.nodes[0]
-                    res = coll.bcast(rt, contributions.get(rt, np.zeros(1)))
-                    reduced = res.data[rt]
-                sim_t = res.sim_seconds
-                cl.clock.charge(sim_t)
-        else:
-            verdict = set(failed_in_topo)
-            repair = cl.repair(verdict) if verdict else None
+        # 2. drain the crash channels (collective errors + heartbeat
+        #    timeouts) through detect → notice → agree → plan → apply
+        actions = self._fault_phase(step, results)
 
-        # 5. straggler soft-fail (routed through the same repair path)
-        lagging = [n for n in cl.straggler.stragglers() if n in cl.topo.nodes]
-        if lagging:
-            for n in lagging:
-                cl.failed.add(n)
-            cl.repair(set(lagging))
+        # 3. the op re-runs on the repaired topology (unless skipped)
+        reduced, sim_t = (None, 0.0)
+        if self.final_collective != "none" and results and not self._skip_op:
+            reduced, sim_t = self._collective_phase(results)
+
+        # 4. straggler soft-fails drain through the same pipeline, after the
+        #    op (a lagging node's contribution still counts this step)
+        actions = actions + cl.pipeline.drain(
+            step, sources=(FaultSource.STRAGGLER,))
 
         self.step_count = step + 1
+        # back-compat: `repair` carries the first CRASH repair only; straggler
+        # soft-fail repairs are surfaced through `actions` and `failed_now`
+        crash_reports = [a.report for a in actions if a.report is not None
+                         and FaultSource.STRAGGLER not in a.sources]
+        failed_now = tuple(sorted({n for a in actions for n in a.verdict}))
         return StepReport(
             step=step,
             results=results,
             reduced=reduced,
-            failed_now=tuple(sorted(verdict)) if verdict else (),
-            repair=repair,
-            skipped_op=skipped,
+            failed_now=failed_now,
+            repair=crash_reports[0] if crash_reports else None,
+            actions=tuple(actions),
+            skipped_op=self._skip_op,
             sim_collective_seconds=sim_t,
             wall_seconds=time.perf_counter() - t_start,
             # renormalize over the shards that actually contributed THIS step
@@ -434,6 +445,7 @@ class LegioExecutor:
             grad_scale=(cl.total_shards / computed_shards
                         if computed_shards else 0.0),
             expanded=tuple(s for r in expansions for s in r.substitutions),
+            respawned=tuple(respawned),
         )
 
     def run(self, n_steps: int) -> list[StepReport]:

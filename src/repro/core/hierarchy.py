@@ -16,9 +16,18 @@ Properties the paper claims — each is asserted by property tests:
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass, field
+from typing import Iterator
 
 from repro.core.policy import LegioPolicy
+
+
+class TopologyTornError(RuntimeError):
+    """Raised when a repair tries to mutate the topology while a
+    :class:`TopologyView` is pinned — the invariant ULFM gets for free from
+    ``MPIX_Comm_shrink``'s collectivity (every participant enters the repair,
+    so no collective can be mid-flight on the old structure)."""
 
 
 @dataclass
@@ -44,6 +53,11 @@ class LegionTopology:
     legions: list[Legion]
     # original (pre-fault) legion index per node — assignment is final
     home: dict[int, int] = field(default_factory=dict)
+    # epoch counter: bumped by every structural mutation; collectives snapshot
+    # the structure behind an epoch-stamped TopologyView and pin it, so a
+    # mid-pipeline repair can never tear a structure a collective is reading
+    epoch: int = 0
+    _pins: int = field(default=0, init=False, repr=False)
 
     # ---- construction ----------------------------------------------------
 
@@ -137,18 +151,46 @@ class LegionTopology:
                 hops.append(nxt)
         return hops
 
+    # ---- snapshots (epoch discipline) ---------------------------------------
+
+    def view(self) -> "TopologyView":
+        """Epoch-stamped immutable snapshot for collectives/batch consumers."""
+        return TopologyView(self)
+
+    @contextmanager
+    def pinned(self) -> Iterator["TopologyView"]:
+        """Snapshot AND pin: any mutation while the view is live raises
+        :class:`TopologyTornError` instead of silently tearing the structure
+        out from under the reader."""
+        view = self.view()
+        self._pins += 1
+        try:
+            yield view
+        finally:
+            self._pins -= 1
+
+    def _mutating(self) -> None:
+        if self._pins:
+            raise TopologyTornError(
+                f"topology mutation attempted while {self._pins} "
+                f"TopologyView(s) are pinned at epoch {self.epoch}")
+        self.epoch += 1
+
     # ---- mutation (repair) --------------------------------------------------
 
     def remove(self, node: int) -> tuple[int, bool]:
         """Exclude a failed node. Returns (legion index, was_master)."""
         lg = self.legion_of(node)
+        self._mutating()
         was_master = lg.master == node
         lg.members.remove(node)
         return lg.index, was_master
 
     def compact(self) -> None:
         """Drop empty legions (a legion that lost all members leaves the ring)."""
-        self.legions = [lg for lg in self.legions if lg.members]
+        if any(not lg.members for lg in self.legions):
+            self._mutating()
+            self.legions = [lg for lg in self.legions if lg.members]
 
     def substitute(self, failed: int, spare: int) -> int:
         """Splice ``spare`` into ``failed``'s legion slot. Returns the legion
@@ -161,6 +203,7 @@ class LegionTopology:
             raise ValueError(f"spare {spare} already belongs to legion "
                              f"{self.home[spare]} — assignment is final")
         lg = self.legion_of(failed)
+        self._mutating()
         lg.members.remove(failed)
         lg.members.append(spare)
         lg.members.sort()
@@ -175,6 +218,7 @@ class LegionTopology:
         if node in self.home:
             raise ValueError(f"node {node} already belongs to legion "
                              f"{self.home[node]} — assignment is final")
+        self._mutating()
         for lg in self.legions:
             if lg.index == legion_index:
                 lg.members.append(node)
@@ -186,6 +230,45 @@ class LegionTopology:
                         if other.index > legion_index), len(self.legions))
             self.legions.insert(pos, lg)
         self.home[node] = legion_index
+
+
+class TopologyView:
+    """Read-only, epoch-stamped snapshot of a :class:`LegionTopology`.
+
+    Collectives and batch planning read from a view, never the live
+    topology: the snapshot is deep-copied at construction, so even if the
+    pin discipline were bypassed the reader's structure could not change
+    underneath it. Mutators are not exposed.
+    """
+
+    _MUTATORS = frozenset({"remove", "compact", "substitute", "expand",
+                           "view", "pinned"})
+
+    def __init__(self, topo: LegionTopology):
+        self.epoch = topo.epoch
+        self._snap = LegionTopology(
+            k=topo.k,
+            legions=[Legion(index=lg.index, members=list(lg.members))
+                     for lg in topo.legions],
+            home=dict(topo.home),
+            epoch=topo.epoch,
+        )
+
+    def __getattr__(self, name: str):
+        if name == "_snap":          # guard recursion during unpickling/init
+            raise AttributeError(name)
+        if name in TopologyView._MUTATORS:
+            raise TypeError(f"TopologyView is read-only: {name}() is not "
+                            f"available on a snapshot")
+        return getattr(self._snap, name)
+
+    @property
+    def node_set(self) -> frozenset[int]:
+        return frozenset(self._snap.nodes)
+
+    def __repr__(self) -> str:
+        return (f"TopologyView(epoch={self.epoch}, size={self._snap.size}, "
+                f"legions={self._snap.n_legions})")
 
 
 def make_topology(nodes: list[int], policy: LegioPolicy) -> LegionTopology:

@@ -75,12 +75,30 @@ class LegioPolicy:
     # the topology then re-expands at the next step boundary.
     nonblocking_substitution: bool = False
     spare_warmup_steps: int = 1
+    # baseline simulated seconds charged per step — this is what makes the
+    # heartbeat channel live: with no collective (final_collective="none")
+    # the sim clock still advances, so a silent node eventually crosses
+    # heartbeat_timeout and the pipeline's detect stage picks it up.
+    step_sim_seconds: float = 1.0
+    # --- elastic spare re-spawn (the MPI_Comm_spawn analogue): when the
+    # warm pool drains below the watermark, the SpareProvisioner schedules
+    # replacement spares that come up after a provisioning delay and feed
+    # back through the SparePool. watermark=0 disables the provisioner.
+    spare_refill_watermark: int = 0
+    spare_provision_delay_steps: int = 2
+    spare_churn_cap: int = 0            # max re-spawned spares; 0 = unlimited
 
     def __post_init__(self) -> None:
         if self.recovery_mode not in RECOVERY_MODES:
             raise ValueError(
                 f"recovery_mode must be one of {RECOVERY_MODES}, "
                 f"got {self.recovery_mode!r}")
+        if self.spare_refill_watermark < 0:
+            raise ValueError("spare_refill_watermark must be >= 0")
+        if self.spare_provision_delay_steps < 0:
+            raise ValueError("spare_provision_delay_steps must be >= 0")
+        if self.spare_churn_cap < 0:
+            raise ValueError("spare_churn_cap must be >= 0")
 
     def choose_k(self, s: int) -> int:
         if self.legion_size > 0:
@@ -99,3 +117,18 @@ class LegioPolicy:
     @property
     def substitution_enabled(self) -> bool:
         return self.recovery_mode != "shrink"
+
+    @property
+    def strategy_key(self) -> str:
+        """Registry key of the RecoveryStrategy this policy composes
+        (see :mod:`repro.core.strategy`). New strategies register under new
+        keys; the ladder this replaces lived in ``VirtualCluster.repair``."""
+        if not self.substitution_enabled:
+            return "shrink"
+        if self.nonblocking_substitution:
+            return "substitute_nonblocking"
+        return "substitute"
+
+    @property
+    def elastic_spares(self) -> bool:
+        return self.spare_refill_watermark > 0

@@ -1,0 +1,194 @@
+"""RecoveryStrategy layer — pluggable repair behaviors behind one seam.
+
+Ashraf et al. ("Shrink or Substitute", 1801.04523) show shrink and
+substitution are interchangeable strategies behind a single recovery
+interface; this module makes that literally true of the runtime. The
+``VirtualCluster._repair_*`` methods and the if/elif ladder in
+``VirtualCluster.repair`` are gone: each recovery mode is one registered
+:class:`RecoveryStrategy` class, selected by ``LegioPolicy.strategy_key``.
+New modes (checkpoint-restart-all, migrate, ...) are one
+``@register_strategy("name")`` class, not executor surgery.
+
+Strategies mutate the cluster (topology, batch plan, spare pool, pending
+splices) but never commit bookkeeping: ``VirtualCluster.repair`` owns
+confirm/charge/record, so every strategy gets identical accounting.
+
+Exhaustion semantics (satellite fix): the non-blocking strategy lands the
+shrink FIRST, then checks the pool — so a strict-mode
+:class:`SparePoolExhausted` always propagates from a *consistent* (shrunk)
+topology, with the committed shrink report attached as ``partial_report``.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+from repro.core.batch import (
+    BatchPlan,
+    initial_assignment,
+    reassign,
+    substitute_assign,
+)
+from repro.core.policy import LegioPolicy
+from repro.core.substitute import (
+    PendingSubstitution,
+    SparePoolExhausted,
+    UnfilledSlot,
+    restore_for_substitute,
+)
+from repro.core.types import RepairReport, RepairStep
+
+if TYPE_CHECKING:
+    from repro.core.executor import VirtualCluster
+
+
+@runtime_checkable
+class RecoveryStrategy(Protocol):
+    """The repair half of the fault pipeline's apply stage."""
+
+    name: str
+
+    def repair(self, cluster: "VirtualCluster",
+               verdict: set[int]) -> RepairReport: ...
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: register a RecoveryStrategy under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_strategy(policy: LegioPolicy) -> RecoveryStrategy:
+    """Compose the strategy the policy asks for (``policy.strategy_key``)."""
+    key = policy.strategy_key
+    try:
+        return _REGISTRY[key](policy)
+    except KeyError:
+        raise KeyError(
+            f"no RecoveryStrategy registered under {key!r} "
+            f"(available: {available_strategies()})") from None
+
+
+class _PolicyBound:
+    def __init__(self, policy: LegioPolicy):
+        self.policy = policy
+
+
+@register_strategy("shrink")
+class ShrinkStrategy(_PolicyBound):
+    """The paper's native discard-and-continue: shrink every failed slot,
+    optionally regrowing from provisioned spares into the smallest legion
+    (beyond-paper elastic regrow, kept for recovery_mode="shrink")."""
+
+    def repair(self, cluster: "VirtualCluster", verdict: set[int],
+               *, regrow: bool = True) -> RepairReport:
+        report = cluster.shrink.repair(cluster.topo, verdict)
+        grown = []
+        while regrow and cluster.spares and cluster.topo.size < cluster.n_initial:
+            spare = cluster.spare_pool.take()
+            target = min((lg for lg in cluster.topo.legions if lg.members),
+                         key=len, default=None)
+            if target is None:
+                from repro.core.hierarchy import make_topology
+                cluster.topo = make_topology([spare], self.policy)
+            else:
+                cluster.topo.expand(target.index, spare)
+            cluster.detector.register(spare, cluster.clock.sim_seconds)
+            grown.append(spare)
+        if grown:
+            report.steps.append(RepairStep(
+                op="include", comm="world", participants=tuple(grown),
+                cost_units=0.0))
+        cluster.plan = reassign(cluster.plan, verdict, self.policy.batch_policy)
+        if grown:
+            # new members take over dropped shards (restart-only-failed)
+            extra = initial_assignment(grown, cluster.shards_per_node)
+            take = list(cluster.plan.dropped_shards)
+            new_assignments = list(cluster.plan.assignments)
+            for a in extra.assignments:
+                shards = tuple(take.pop(0) for _ in a.shards if take)
+                new_assignments.append(type(a)(node=a.node, shards=shards))
+            cluster.plan = BatchPlan(
+                assignments=tuple(new_assignments),
+                dropped_shards=tuple(take),
+                policy=cluster.plan.policy)
+        return report
+
+
+@register_strategy("substitute")
+class SubstituteStrategy(_PolicyBound):
+    """Blocking substitution: splice warm spares during the repair itself;
+    the substituted ranks compute from the next step. Slots the pool cannot
+    cover are shrunk (then_shrink) or refused before mutation (strict) —
+    shrunk slots go on the provisioner backlog for later healing."""
+
+    def repair(self, cluster: "VirtualCluster",
+               verdict: set[int]) -> RepairReport:
+        owned = {n: cluster.plan.shards_of(n) for n in verdict}
+        homes = {n: cluster.topo.home.get(n) for n in verdict}
+        report = cluster.substitute.repair(cluster.topo, verdict,
+                                           cluster.spare_pool)
+        for failed, spare in report.substitutions:
+            cluster.detector.register(spare, cluster.clock.sim_seconds)
+            cluster._note_restored(spare, restore_for_substitute(
+                cluster.checkpointer, cluster.topo.home[spare], failed))
+        cluster.plan = substitute_assign(cluster.plan, report.substitution_map)
+        if report.unfilled:
+            cluster.plan = reassign(cluster.plan, set(report.unfilled),
+                                    self.policy.batch_policy)
+            for node in report.unfilled:
+                cluster.note_unfilled(UnfilledSlot(
+                    failed=node, legion=homes[node], shards=owned[node]))
+        return report
+
+
+@register_strategy("substitute_nonblocking")
+class NonblockingSubstituteStrategy(_PolicyBound):
+    """Non-blocking substitution: repair by shrink now (the next step runs
+    degraded), schedule the splice for after the spare's warmup. The shrink
+    lands BEFORE the pool is consulted, so strict-mode exhaustion leaves a
+    consistent topology (dead nodes out) and attaches the committed shrink
+    report to the raised :class:`SparePoolExhausted`."""
+
+    def repair(self, cluster: "VirtualCluster",
+               verdict: set[int]) -> RepairReport:
+        topo = cluster.topo
+        homes = {n: topo.home[n] for n in verdict
+                 if n in topo.home and n in topo.nodes}
+        # each pending splice returns exactly the failed node's own shards
+        owned = {n: cluster.plan.shards_of(n) for n in homes}
+        report = ShrinkStrategy(self.policy).repair(cluster, verdict,
+                                                    regrow=False)
+        try:
+            cluster.spare_pool.require(
+                len(homes), self.policy.recovery_mode == "substitute")
+        except SparePoolExhausted as exc:
+            exc.partial_report = report
+            raise
+        scheduled = 0
+        for node, legion in sorted(homes.items()):
+            spare = cluster.spare_pool.take()
+            if spare is None:
+                # substitute_then_shrink: stay shrunk, remember the slot
+                cluster.note_unfilled(UnfilledSlot(
+                    failed=node, legion=legion, shards=owned[node]))
+                continue
+            scheduled += 1
+            # the fault step itself ran degraded; spare_warmup_steps MORE
+            # steps run shrunk before the splice lands at a boundary
+            cluster.pending.append(PendingSubstitution(
+                failed=node, spare=spare, legion=legion,
+                ready_step=cluster._step + 1 + self.policy.spare_warmup_steps,
+                shards=owned[node]))
+        report.mode = ("substitute(nonblocking)" if scheduled == len(homes)
+                       else "substitute_then_shrink")
+        return report

@@ -54,7 +54,15 @@ PyTree = Any
 
 
 class SparePoolExhausted(RuntimeError):
-    """Raised under recovery_mode="substitute" when no warm spare is left."""
+    """Raised under recovery_mode="substitute" when no warm spare is left.
+
+    ``partial_report`` carries a repair that already committed before the
+    exhaustion was discovered (the non-blocking strategy lands the shrink
+    first, so the error always leaves a consistent — shrunk — topology);
+    ``VirtualCluster.repair`` records it before re-raising.
+    """
+
+    partial_report: "RepairReport | None" = None
 
 
 @dataclass
@@ -88,14 +96,109 @@ class SparePool:
         return len(self.available)
 
     def require(self, needed: int, strict: bool) -> None:
-        """Under strict (recovery_mode="substitute") semantics, refuse —
-        BEFORE anything is mutated — when the pool cannot cover ``needed``
-        failed slots."""
+        """Under strict (recovery_mode="substitute") semantics, refuse when
+        the pool cannot cover ``needed`` failed slots. The blocking engine
+        calls this before anything is mutated; the non-blocking strategy
+        deliberately calls it AFTER its shrink has landed, so the error
+        propagates from a consistent topology (the committed shrink rides
+        along as ``SparePoolExhausted.partial_report``)."""
         if strict and needed > len(self.available):
             raise SparePoolExhausted(
                 f"{needed} failed node(s) but only {len(self.available)} "
                 f"warm spare(s) left (recovery_mode='substitute' does not "
                 f"degrade; use 'substitute_then_shrink')")
+
+    def restock(self, node: int) -> None:
+        """Feed a freshly provisioned spare back into the pool (the
+        SpareProvisioner's delivery path). FIFO order is preserved: re-spawned
+        spares queue behind any originals still warm."""
+        self.available.append(node)
+
+
+@dataclass(frozen=True)
+class UnfilledSlot:
+    """A failed slot that was shrunk for lack of spares — remembered so the
+    provisioner can heal it once replacement spares come up."""
+
+    failed: int
+    legion: int                    # home legion index (assignment is final)
+    shards: tuple[int, ...] = ()   # the slot's shards at fault time
+
+
+@dataclass
+class SpareProvisioner:
+    """Elastic re-spawn of consumed spares — the ``MPI_Comm_spawn`` analogue
+    (ROADMAP item). A background pipeline stage polled at step boundaries:
+
+      * **watermark** — when warm + in-flight spares drop below
+        ``policy.spare_refill_watermark``, schedule replacements up to the
+        pool's provisioned capacity;
+      * **delay** — a scheduled spare becomes warm only after
+        ``policy.spare_provision_delay_steps`` steps (node acquisition +
+        boot is never free);
+      * **churn cap** — ``policy.spare_churn_cap`` bounds the total number
+        of re-spawned spares over the campaign (0 = unbounded).
+
+    Spare ids keep growing monotonically above every id ever allocated, so
+    a re-spawned spare can never demote a surviving master (the paper's
+    lowest-rank master rule) — property-tested.
+    """
+
+    policy: LegioPolicy
+    pool: SparePool
+    next_id: int
+    inflight: list[tuple[int, int]] = field(default_factory=list)  # (node, ready_step)
+    spawned: int = 0               # total re-spawned over the campaign
+    delivered: list[int] = field(default_factory=list)
+
+    @staticmethod
+    def for_pool(n_nodes: int, pool: SparePool,
+                 policy: LegioPolicy) -> "SpareProvisioner":
+        return SpareProvisioner(policy=policy, pool=pool,
+                                next_id=n_nodes + pool.capacity)
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy.elastic_spares
+
+    def _churn_budget(self) -> int:
+        if self.policy.spare_churn_cap <= 0:
+            return 10 ** 9
+        return self.policy.spare_churn_cap - self.spawned
+
+    def poll(self, step: int) -> list[int]:
+        """Deliver due spares into the pool, then top up below-watermark
+        capacity. Returns the node ids delivered this boundary."""
+        if not self.enabled:
+            return []
+        ready = [n for n, rs in self.inflight if rs <= step]
+        self.inflight = [(n, rs) for n, rs in self.inflight if rs > step]
+        for node in ready:
+            self.pool.restock(node)
+            self.delivered.append(node)
+        self.refill(step)
+        return ready
+
+    def refill(self, step: int) -> None:
+        """Schedule replacements for below-watermark capacity. Also called
+        after the backlog consumes freshly delivered spares, so replacement
+        provisioning overlaps the healing splices' warmup instead of waiting
+        a boundary."""
+        if self.enabled:
+            self._schedule(step)
+
+    def _schedule(self, step: int) -> None:
+        covered = len(self.pool.available) + len(self.inflight)
+        if covered >= self.policy.spare_refill_watermark:
+            return
+        # never grow past the provisioned capacity: a watermark above
+        # capacity triggers earlier, it does not raise the ceiling
+        deficit = min(self.pool.capacity - covered, self._churn_budget())
+        ready_step = step + self.policy.spare_provision_delay_steps
+        for _ in range(max(deficit, 0)):
+            self.inflight.append((self.next_id, ready_step))
+            self.next_id += 1
+            self.spawned += 1
 
 
 @dataclass(frozen=True)

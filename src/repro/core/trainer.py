@@ -25,7 +25,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.cr import LegionCheckpointer
 from repro.core.executor import VirtualCluster
 from repro.core.mesh_manager import CompileCache, DevicePool, MeshManager
-from repro.core.types import RepairReport
+from repro.core.types import FaultEvent, FaultSource, RepairReport
 from repro.data.pipeline import make_batch
 from repro.models import api
 from repro.optim import (
@@ -143,17 +143,26 @@ class ResilientTrainer:
         t0 = time.perf_counter()
         step = self.step
 
-        # step boundary: warmed-up non-blocking substitutes rejoin before
-        # new shards are handed out (re-expansion = mesh change too)
+        # step boundary: the provisioner delivers re-spawned spares and
+        # warmed-up non-blocking substitutes rejoin before new shards are
+        # handed out (re-expansion = mesh change too)
+        cl.poll_provisioner(step)
         expansions = cl.poll_substitutions(step)
         # fault injection surfaces BEFORE the step's collective in real runs;
-        # here: inject, detect at the step boundary, repair, then compute.
+        # here the observed failures feed the same pipeline the executor
+        # drains — detect → notice → agree → plan → apply — so the trainer
+        # repairs through the registered RecoveryStrategy, not a side door.
         events = cl.inject(step)
         repair = None
         recompiled = bool(expansions)
-        if events:
-            verdict = {e.node for e in events if e.node in cl.topo.nodes}
-            repair = cl.repair(verdict)
+        observed = {e.node for e in events if e.node in cl.topo.nodes}
+        if observed:
+            cl.pipeline.observe(FaultEvent(
+                nodes=tuple(sorted(observed)), step=step,
+                source=FaultSource.INJECTED))
+        actions = cl.pipeline.drain(step, sources=(FaultSource.INJECTED,))
+        if actions:
+            repair = actions[0].report
             recompiled = True  # mesh change forces re-lower unless cached
 
         batch, grad_scale = self._global_batch(step)

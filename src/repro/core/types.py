@@ -39,6 +39,62 @@ class FailureEvent:
     kind: FailureKind = FailureKind.CRASH
 
 
+class FaultSource(enum.Enum):
+    """Detection channel a fault signal arrived on (pipeline detect stage)."""
+
+    COLLECTIVE = "collective"    # PROC_FAILED surfaced by a collective op
+    HEARTBEAT = "heartbeat"      # HeartbeatDetector.sweep timeout
+    STRAGGLER = "straggler"      # StragglerDetector soft-fail
+    INJECTED = "injected"        # ground-truth feed (trainer/driver sims)
+
+
+PIPELINE_STAGES = ("detect", "notice", "agree", "plan", "apply")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One fault signal flowing through the FaultPipeline.
+
+    Unlike :class:`FailureEvent` (the injector's ground-truth schedule), a
+    FaultEvent is *observational*: it records what some channel saw, before
+    noticing semantics and agreement have run.
+    """
+
+    nodes: tuple[int, ...]
+    step: int
+    source: FaultSource
+    kind: FailureKind = FailureKind.CRASH
+    op: str | None = None        # collective op that surfaced it (COLLECTIVE)
+    root: int | None = None      # the op's root, for bcast noticing
+    participants: tuple[int, ...] | None = None  # the op's member set; None
+                                 # = resolve against the topology at drain
+
+
+@dataclass(frozen=True)
+class RecoveryAction:
+    """Terminal outcome of one pipeline drain: the agreed verdict plus the
+    repair the active RecoveryStrategy applied for it. Exactly one terminal
+    action exists per agreed-failed node (property-tested)."""
+
+    step: int
+    verdict: tuple[int, ...]
+    strategy: str                          # registry key of the strategy
+    sources: tuple[FaultSource, ...]
+    report: "RepairReport | None" = None
+    terminal: bool = True
+    stage_seconds: dict[str, float] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class PipelineTrace:
+    """Per-drain stage-latency record (benchmarks read these)."""
+
+    step: int
+    n_events: int
+    verdict: tuple[int, ...]
+    stage_seconds: dict[str, float] = field(default_factory=dict)
+
+
 @dataclass
 class RepairStep:
     """One stage of a repair plan (a shrink, a notify, a promote, or a

@@ -1,5 +1,4 @@
 """Fault agreement: the BNP fix (paper §IV) and the in-program bitmap reduce."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, strategies as st
@@ -8,7 +7,6 @@ from repro.core.agreement import (
     agree_bitmap_inprogram,
     agree_fault,
     agreement_rounds,
-    liveness_psum,
 )
 from repro.dist.compat import make_mesh
 

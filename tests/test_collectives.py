@@ -1,6 +1,5 @@
 """Hierarchical collective schedules (paper §V / Fig. 4) and timing model."""
 import numpy as np
-import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.collectives import (

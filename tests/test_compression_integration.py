@@ -1,6 +1,5 @@
 """Gradient compression on the cross-legion hop (beyond-paper feature)."""
 import numpy as np
-import pytest
 
 from repro.core import (
     FaultInjector,

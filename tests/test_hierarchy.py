@@ -1,5 +1,4 @@
 """Property tests for the legion topology (paper §V claims (a)/(b)/(c))."""
-import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.hierarchy import LegionTopology, make_topology

@@ -1,0 +1,289 @@
+"""Fault pipeline: stage flow, topology epochs, strategies, elastic re-spawn."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    FaultInjector,
+    FaultSource,
+    LegionTopology,
+    LegioExecutor,
+    LegioPolicy,
+    RecoveryStrategy,
+    TopologyTornError,
+    VirtualCluster,
+    available_strategies,
+    make_strategy,
+    register_strategy,
+)
+
+
+def work(node, shard, step):
+    return np.ones(4) * (shard + 1)
+
+
+# ---------------------------------------------------------------------------
+# strategy registry (the ladder replacement)
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_policy_modes():
+    assert {"shrink", "substitute", "substitute_nonblocking"} <= \
+        set(available_strategies())
+    for kwargs, key in [
+        (dict(), "shrink"),
+        (dict(recovery_mode="substitute", spare_nodes=1), "substitute"),
+        (dict(recovery_mode="substitute_then_shrink", spare_nodes=1,
+              nonblocking_substitution=True), "substitute_nonblocking"),
+    ]:
+        pol = LegioPolicy(**kwargs)
+        strat = make_strategy(pol)
+        assert isinstance(strat, RecoveryStrategy)
+        assert strat.name == key == pol.strategy_key
+
+
+def test_new_strategy_is_one_registered_class():
+    """The refactor's point: a new recovery mode plugs in without touching
+    the executor — register, instantiate, repair."""
+
+    @register_strategy("noop_for_test")
+    class NoopStrategy:
+        def __init__(self, policy):
+            self.policy = policy
+
+        def repair(self, cluster, verdict):
+            # handle the fault by ignoring it (worst strategy ever)
+            from repro.core import RepairReport
+            return RepairReport(trigger=tuple(sorted(verdict)),
+                                hierarchical=False, master_failed=False,
+                                survivors=cluster.topo.size, mode="noop")
+
+    assert "noop_for_test" in available_strategies()
+    cl = VirtualCluster(8)
+    cl.strategy = NoopStrategy(cl.policy)
+    report = cl.repair({3})
+    assert report.mode == "noop" and cl.repairs == [report]
+
+
+# ---------------------------------------------------------------------------
+# property (a): every injected fault -> exactly one terminal RecoveryAction
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(8, 24), data=st.data())
+def test_each_fault_yields_exactly_one_terminal_action(n, data):
+    mode = data.draw(st.sampled_from(
+        ["shrink", "substitute_then_shrink", "substitute"]))
+    n_fail = data.draw(st.integers(1, min(4, n - 2)))
+    victims = data.draw(st.permutations(list(range(n))))[:n_fail]
+    steps = sorted(data.draw(
+        st.lists(st.integers(1, 6), min_size=n_fail, max_size=n_fail)))
+    pol = LegioPolicy(legion_size=4, recovery_mode=mode,
+                      spare_fraction=0.5 if mode != "shrink" else 0.0)
+    cl = VirtualCluster(n, policy=pol,
+                        injector=FaultInjector.at(list(zip(steps, victims))))
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(9)
+    actions = [a for r in reports for a in r.actions]
+    for victim in victims:
+        hits = [a for a in actions if victim in a.verdict and a.terminal]
+        assert len(hits) == 1, f"node {victim}: {hits}"
+        assert hits[0].report is not None
+        assert set(hits[0].stage_seconds) == \
+            {"detect", "notice", "agree", "plan", "apply"}
+
+
+# ---------------------------------------------------------------------------
+# property (b): the topology epoch never changes while a view is live
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(4, 32), k=st.integers(2, 6), data=st.data())
+def test_epoch_frozen_while_view_pinned(n, k, data):
+    topo = LegionTopology.build(list(range(n)), k)
+    victim = data.draw(st.integers(0, n - 1))
+    with topo.pinned() as tv:
+        epoch_before = topo.epoch
+        assert tv.epoch == epoch_before
+        for mutate in (lambda: topo.remove(victim),
+                       lambda: topo.substitute(victim, n + 1),
+                       lambda: topo.expand(0, n + 2)):
+            with pytest.raises(TopologyTornError):
+                mutate()
+        assert topo.epoch == epoch_before      # nothing slipped through
+        assert tv.nodes == sorted(range(n))    # snapshot intact
+    # released: mutation proceeds and bumps the epoch
+    topo.remove(victim)
+    assert topo.epoch == epoch_before + 1
+    assert tv.nodes == sorted(range(n))        # old snapshot still frozen
+
+
+def test_view_is_read_only_and_epoch_stamped():
+    topo = LegionTopology.build(list(range(8)), 4)
+    tv = topo.view()
+    with pytest.raises(TypeError):
+        tv.remove(0)
+    topo.remove(0)
+    assert tv.epoch == topo.epoch - 1          # view pins the old epoch
+    assert 0 in tv.nodes and 0 not in topo.nodes
+
+
+# ---------------------------------------------------------------------------
+# property (c): re-spawned spares obey finality, never demote a master
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+def test_respawned_spares_preserve_finality_and_masters(data):
+    n = data.draw(st.integers(12, 20))
+    n_fail = data.draw(st.integers(3, 6))
+    victims = data.draw(st.permutations(list(range(n))))[:n_fail]
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      spare_nodes=1, spare_refill_watermark=1,
+                      spare_provision_delay_steps=1, spare_churn_cap=16)
+    cl = VirtualCluster(n, policy=pol, injector=FaultInjector.at(
+        [(2, v) for v in victims]))
+    ex = LegioExecutor(cl, work)
+    seen_ids: set[int] = set(range(n)) | set(cl.spare_pool.available)
+    for _ in range(14):
+        ex.run_step()
+        for node in cl.provisioner.delivered:
+            assert node >= n                       # above every initial id
+        for lg in cl.topo.legions:
+            assert lg.master == min(lg.members)    # lowest-rank master rule
+            for m in lg.members:
+                assert cl.topo.home[m] == lg.index  # assignment is final
+        seen_ids |= set(cl.topo.nodes)
+    # monotone id allocation: the provisioner never reuses an id
+    delivered = cl.provisioner.delivered
+    assert delivered == sorted(delivered)
+    assert len(set(delivered)) == len(delivered)
+    # every surviving original member outranks any spliced spare in its legion
+    for lg in cl.topo.legions:
+        originals = [m for m in lg.members if m < n]
+        if originals:
+            assert lg.master == min(originals)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat channel (previously dead code) reaches agreement
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_timeout_alone_triggers_repair():
+    """Acceptance: with final_collective="none" there is no collective error
+    channel at all — the dead node is detected purely by its heartbeat going
+    stale, and the suspicion flows detect → notice → agree → plan → apply."""
+    pol = LegioPolicy(legion_size=4, heartbeat_timeout=3.0)
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at([(2, 5)]))
+    ex = LegioExecutor(cl, work, final_collective="none")
+    reports = ex.run(10)
+    assert 5 not in cl.topo.nodes and cl.topo.size == 15
+    hits = [(r, a) for r in reports for a in r.actions if 5 in a.verdict]
+    assert len(hits) == 1
+    report, action = hits[0]
+    assert action.sources == (FaultSource.HEARTBEAT,)
+    assert report.failed_now == (5,) and report.repair is action.report
+    # detection is by timeout, so it lands AFTER the fault step, once the
+    # sim clock has advanced past heartbeat_timeout
+    assert action.step > 2
+
+
+def test_collective_channel_still_detects_immediately():
+    """The unified pipeline keeps the fast path: collective errors confirm
+    at the fault step, well before any heartbeat could expire."""
+    pol = LegioPolicy(legion_size=4, heartbeat_timeout=1000.0)
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at([(2, 5)]))
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(4)
+    assert reports[2].failed_now == (5,)
+    assert FaultSource.COLLECTIVE in reports[2].actions[0].sources
+
+
+# ---------------------------------------------------------------------------
+# straggler soft-fails are surfaced (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_straggler_repair_surfaces_in_step_report():
+    """Straggler soft-fails used to be repaired invisibly — cl.repair was
+    called but the report discarded and failed_now omitted the lagging
+    nodes. Through the pipeline they are first-class actions."""
+    import time as _time
+
+    def slow_for_3(node, shard, step):
+        if node == 3:
+            _time.sleep(0.12)
+        return np.ones(4)
+
+    pol = LegioPolicy(legion_size=4, straggler_threshold=2.0)
+    cl = VirtualCluster(8, policy=pol)
+    cl.straggler.min_latency = 0.05
+    cl.straggler.min_samples = 2
+    ex = LegioExecutor(cl, slow_for_3)
+    reports = ex.run(4)
+    lagged = [r for r in reports if 3 in r.failed_now]
+    assert lagged, "straggler never surfaced in failed_now"
+    action = next(a for a in lagged[0].actions if 3 in a.verdict)
+    assert action.sources == (FaultSource.STRAGGLER,)
+    assert action.report is not None               # the repair is visible
+    assert 3 not in cl.topo.nodes                  # soft-failed out
+    # the straggler's contribution still counted in the step it lagged
+    assert lagged[0].results.get(3) is not None
+
+
+# ---------------------------------------------------------------------------
+# elastic re-spawn (acceptance e2e)
+# ---------------------------------------------------------------------------
+
+def test_e2e_provisioner_restores_full_capacity_after_exhaustion():
+    """Acceptance: a campaign with MORE faults than initially-provisioned
+    spares under substitute_then_shrink returns to full n_initial capacity
+    once the provisioner refills the pool."""
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      spare_nodes=2, spare_refill_watermark=2,
+                      spare_provision_delay_steps=2, spare_churn_cap=8)
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at(
+        [(2, 1), (2, 2), (2, 5), (2, 9)]))     # 4 faults > 2 spares
+    ex = LegioExecutor(cl, work)
+    reports = ex.run(12)
+    # fault step: pool covers 2 slots, the other 2 shrink (degraded)
+    assert reports[2].repair.mode == "substitute_then_shrink"
+    assert len(reports[2].repair.unfilled) == 2
+    assert cl.repairs[0].survivors == 14
+    # the provisioner re-spawned spares and the backlog healed through the
+    # pending-splice path: full capacity is back
+    assert cl.topo.size == 16
+    assert cl.plan.active_shards == 16
+    assert cl.backlog == [] and cl.provisioner.spawned <= 8
+    respawn_steps = [r.step for r in reports if r.respawned]
+    heal_steps = [r.step for r in reports if r.expanded]
+    assert respawn_steps and heal_steps
+    assert min(heal_steps) > min(respawn_steps) >= 2 + \
+        pol.spare_provision_delay_steps
+    # and the pool itself is back at the watermark for the NEXT fault
+    assert len(cl.spare_pool.available) >= pol.spare_refill_watermark
+    # steady throughput after healing: the full 16-shard reduce returns
+    full = sum(range(1, 17))
+    spare_shards = sorted(s for a in cl.plan.assignments for s in a.shards)
+    assert spare_shards == list(range(16))
+    assert reports[-1].reduced[0] == full
+
+
+def test_provisioner_respects_churn_cap():
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      spare_nodes=1, spare_refill_watermark=1,
+                      spare_provision_delay_steps=1, spare_churn_cap=2)
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at(
+        [(1, 1), (3, 2), (5, 3), (7, 4), (9, 5)]))   # 5 faults, cap 2 respawns
+    ex = LegioExecutor(cl, work)
+    ex.run(14)
+    assert cl.provisioner.spawned == 2             # hard churn ceiling
+    # 1 original + 2 re-spawned spares absorbed 3 of 5 faults
+    assert cl.topo.size == 16 - 2
+
+
+def test_provisioner_disabled_without_watermark():
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      spare_nodes=1)
+    cl = VirtualCluster(16, policy=pol,
+                        injector=FaultInjector.at([(1, 1), (2, 2)]))
+    ex = LegioExecutor(cl, work)
+    ex.run(8)
+    assert not cl.provisioner.enabled
+    assert cl.provisioner.spawned == 0 and cl.backlog == []
+    assert cl.topo.size == 15                      # stays degraded (PR-1 era)

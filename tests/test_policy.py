@@ -1,7 +1,5 @@
 """Eq. 1–4 checks: optimal legion size and the hierarchical threshold."""
-import math
 
-import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.policy import (

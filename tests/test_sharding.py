@@ -1,9 +1,8 @@
 """Sharding rules and the loop-aware HLO cost analyzer."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_smoke_config
 from repro.dist.compat import abstract_mesh, make_mesh

@@ -295,10 +295,12 @@ def test_fault_step_grad_scale_renormalizes_over_computed_shards():
     assert reports[3].grad_scale == 1.0                     # spare computes
 
 
-def test_nonblocking_strict_refuses_before_mutating():
-    """Strict mode with an undersized pool must raise without shrinking the
-    topology, consuming spares, or recording a repair — same invariant the
-    blocking engine enforces."""
+def test_nonblocking_strict_exhaustion_lands_shrink_first():
+    """Strict mode with an undersized pool raises — but only AFTER the
+    shrink has landed, so the error propagates from a *consistent* topology
+    (confirmed-dead nodes are out, the committed shrink is on record) rather
+    than one still containing corpses. No spare is consumed, no splice is
+    scheduled."""
     inj = FaultInjector.at([(0, 1), (0, 2)])
     pol = LegioPolicy(legion_size=4, recovery_mode="substitute",
                       nonblocking_substitution=True, spare_nodes=1)
@@ -306,9 +308,12 @@ def test_nonblocking_strict_refuses_before_mutating():
     ex = LegioExecutor(cl, work)
     with pytest.raises(SparePoolExhausted):
         ex.run_step()
-    assert cl.topo.size == 16
+    # the shrink landed first: dead nodes are gone, topology is consistent
+    assert cl.topo.size == 14
+    assert not (set(cl.topo.nodes) & cl.failed)
+    # the committed shrink is recorded; the pool and splice queue untouched
+    assert len(cl.repairs) == 1 and cl.repairs[0].survivors == 14
     assert len(cl.spare_pool) == 1 and cl.pending == []
-    assert cl.repairs == []
 
 
 def test_nonblocking_splice_returns_only_own_shards():
