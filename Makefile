@@ -3,14 +3,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-quick bench install-dev
+.PHONY: test lint docs bench-quick bench install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 # ruff (config in pyproject.toml); CI's lint job runs exactly this
 lint:
-	$(PYTHON) -m ruff check src/repro/core tests benchmarks examples
+	$(PYTHON) -m ruff check src/repro/core src/repro/serve tests benchmarks examples
+
+# docs site link-check (README + docs/); CI's docs job runs exactly this
+docs:
+	$(PYTHON) tools/check_links.py
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
 bench-quick:

@@ -19,6 +19,7 @@ SUITES = [
     ("fig12_docking", "benchmarks.app_docking", "Fig. 12"),
     ("eq3_4_optimal_k", "benchmarks.optimal_k", "Eq. 3/4"),
     ("repair_recompile", "benchmarks.repair_recompile", "beyond-paper"),
+    ("serve_latency", "benchmarks.serve_latency", "beyond-paper"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
 ]
 

@@ -1,0 +1,98 @@
+"""Anatomy of fault-resilient serving (repro.serve) — narrated.
+
+A 16-node cluster (k=4 → 4 legions) serves a streaming request campaign
+under non-blocking substitution. Mid-campaign a worker and a legion master
+die with batches in flight; the walkthrough prints, round by round, what
+the serve subsystem does about it:
+
+  * the RequestRouter shards arrivals across legions (least-loaded);
+  * each legion drains micro-batches (LegioPolicy.serve_microbatch);
+  * the dying nodes take their in-flight batches with them — the
+    FaultPipeline agrees on the verdict and the ServeEngine's listener
+    re-enqueues exactly those requests (front of the queue);
+  * healthy legions keep dispatching in the same round — repair never
+    barriers serving;
+  * the dedup guard keeps redelivery invisible: every request id completes
+    exactly once from the client's view.
+
+  PYTHONPATH=src python examples/resilient_serving.py
+"""
+import numpy as np
+
+from repro.core import FaultInjector, LegioPolicy, VirtualCluster
+from repro.serve import Request, ServeEngine
+
+N_NODES = 16
+TOTAL_REQUESTS = 180
+ARRIVALS_PER_ROUND = 48
+
+
+def score(node: int, batch: list[Request], step: int) -> dict[int, float]:
+    """The model stand-in: a deterministic per-request 'docking score'."""
+    return {r.rid: float(np.sin(r.rid) * 100.0) for r in batch}
+
+
+def main() -> None:
+    policy = LegioPolicy(
+        legion_size=4,
+        serve_microbatch=3,
+        recovery_mode="substitute_then_shrink",
+        spare_fraction=0.25,                # 4 warm spares
+        nonblocking_substitution=True,      # repair overlaps serving
+    )
+    injector = FaultInjector.at([(1, 5), (2, 0)])   # a worker, then a master
+    cluster = VirtualCluster(N_NODES, policy=policy, injector=injector)
+    engine = ServeEngine(cluster, score)
+
+    print(f"[serve] {N_NODES} nodes, k=4 -> {cluster.topo.n_legions} legions, "
+          f"masters {cluster.topo.masters}, "
+          f"{len(cluster.spare_pool.available)} warm spares")
+
+    submitted = 0
+    round_idx = 0
+    while submitted < TOTAL_REQUESTS or engine.pending:
+        if submitted < TOTAL_REQUESTS:
+            n = min(ARRIVALS_PER_ROUND, TOTAL_REQUESTS - submitted)
+            engine.submit(n)
+            submitted += n
+        rep = engine.run_round()
+        line = (f"  round {rep.step}: dispatched {sum(rep.dispatched.values())} "
+                f"to {len(rep.dispatched)} nodes, completed {rep.completed_now}, "
+                f"backlog {rep.backlog}")
+        if rep.requeued_now:
+            line += f", RE-ENQUEUED {rep.requeued_now} in-flight"
+        for a in rep.actions:
+            line += (f"\n           fault: verdict {list(a.verdict)} "
+                     f"via {[s.value for s in a.sources]} -> "
+                     f"{a.strategy} ({a.report.mode if a.report else '-'})")
+        if rep.expanded:
+            line += f"\n           splice landed: {list(rep.expanded)}"
+        print(line)
+        round_idx += 1
+
+    m = engine.metrics.summary(round_idx)
+    print(f"\n[serve] campaign done in {round_idx} rounds: "
+          f"{m['completed']}/{TOTAL_REQUESTS} completed, "
+          f"{m['requeues']} redeliveries, "
+          f"{m['duplicates_suppressed']} duplicates suppressed")
+    print(f"[serve] latency p50={m['p50_latency_rounds']:.0f} "
+          f"p99={m['p99_latency_rounds']:.0f} rounds; "
+          f"goodput {m['goodput_rps']:.1f} req/round; "
+          f"survivors {len(cluster.live_nodes)}/{N_NODES}")
+
+    # the guarantees, asserted: every id completed (at-least-once
+    # redelivery), each exactly once (write-once dedup guard)
+    assert sorted(engine.completed) == list(range(TOTAL_REQUESTS))
+    rids = [r.rid for r in engine.metrics.completions]
+    assert len(rids) == len(set(rids)) == TOTAL_REQUESTS
+    fault_legions = {cluster.topo.home[0], cluster.topo.home[5]}
+    healthy = [lg.index for lg in cluster.topo.legions
+               if lg.members and lg.index not in fault_legions]
+    stalls = sum(engine.metrics.stalled_rounds(lg, 1, 2) for lg in healthy)
+    assert stalls == 0, "healthy legions must keep dispatching during repair"
+    print(f"[serve] healthy legions {healthy} never stalled during the "
+          f"repair rounds (0 zero-dispatch rounds in the trace)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,19 @@
-"""End-to-end driver: train a ~100M-param llama through node failures.
+"""End-to-end driver: train a llama through node failures.
 
-A 28M..100M-parameter model (flag-selectable) trains for a few hundred steps
-on the counter-based Markov stream while the virtual cluster loses three
-nodes — one mid-warmup, one master, and one straggler that gets soft-failed.
-Checkpoints are written per-legion; at the end the script demonstrates
-restart-only-failed: a replacement node restores *only* the dead member's
-shard and the loss curve continues where it left off.
+A small llama (~13M params by default; ``--full`` scales to ~100M,
+``--tiny`` shrinks to CI size) trains on the counter-based Markov stream
+while the virtual cluster loses two nodes — one mid-warmup, one legion
+master. Checkpoints are written per-legion; at the end the script
+demonstrates restart-only-failed: a replacement node restores *only* the
+dead member's shard and the loss curve continues where it left off.
 
-  PYTHONPATH=src python examples/resilient_training.py           # ~100M
+The default is sized to finish in well under a minute on a laptop CPU
+(every file under examples/ is held to that budget — see
+tests/test_examples.py); ``--full`` restores the original ~100M/300-step
+campaign for overnight-scale runs.
+
+  PYTHONPATH=src python examples/resilient_training.py           # ~13M, fast
+  PYTHONPATH=src python examples/resilient_training.py --full    # ~100M
   PYTHONPATH=src python examples/resilient_training.py --tiny    # CI-sized
 """
 import argparse
@@ -34,16 +40,26 @@ MODEL_TINY = MODEL_100M.replace(
     name="llama-tiny", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
     head_dim=32, d_ff=256, vocab_size=512)
 
+# default: big enough to show a real loss curve, small enough that the
+# whole walkthrough (train + 2 repairs + checkpoint restore) stays under
+# the examples/ ~60 s budget on CPU
+MODEL_SMALL = MODEL_100M.replace(
+    name="llama-5m", n_layers=3, d_model=256, n_heads=4, n_kv_heads=2,
+    head_dim=64, d_ff=768, vocab_size=4096)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true", help="CI-sized model")
+    ap.add_argument("--full", action="store_true",
+                    help="the original ~100M / 300-step campaign")
     ap.add_argument("--steps", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = MODEL_TINY if args.tiny else MODEL_100M
-    steps = args.steps or (60 if args.tiny else 300)
-    seq_len = 64 if args.tiny else 256
+    cfg = (MODEL_TINY if args.tiny
+           else MODEL_100M if args.full else MODEL_SMALL)
+    steps = args.steps or (60 if args.tiny else 300 if args.full else 40)
+    seq_len = 64 if args.tiny else 256 if args.full else 96
 
     tc = TrainConfig(learning_rate=3e-3, total_steps=steps,
                      warmup_steps=max(steps // 10, 1),

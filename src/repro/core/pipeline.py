@@ -24,6 +24,23 @@ step-boundary seam:
 Each drain emits at most one terminal :class:`RecoveryAction` covering the
 agreed verdict, with per-stage wall latencies recorded on the action and in
 ``traces`` (benchmarks/repair_time.py reads the breakdown).
+
+Invariants (asserted by tests/test_pipeline.py and tests/test_serve.py):
+
+  * **one terminal action per fault** — every agreed-failed node appears in
+    the verdict of exactly one terminal RecoveryAction over the campaign
+    (a drain never re-repairs a node a previous drain already repaired);
+  * **frozen epochs under pin** — the apply stage mutates the topology only
+    through ``VirtualCluster.repair``, which is never called while a
+    ``TopologyView`` is pinned: a drain either completes before a
+    collective snapshots the structure or raises ``TopologyTornError``;
+  * **listeners see every terminal action** — subscribers registered with
+    :meth:`FaultPipeline.add_listener` are invoked once per terminal
+    action, *after* the repair has been applied. The serve subsystem
+    (repro.serve) relies on this to re-enqueue a failed node's in-flight
+    requests at-least-once: the listener fires for every verdict the node
+    appears in, and the engine's dedup guard collapses redeliveries back
+    to exactly-once from the client's view.
 """
 from __future__ import annotations
 
@@ -55,6 +72,13 @@ class FaultPipeline:
         self.inbox: list[FaultEvent] = []
         self.actions: list[RecoveryAction] = []
         self.traces: list[PipelineTrace] = []
+        self._listeners: list[Callable[[RecoveryAction], None]] = []
+
+    def add_listener(self, fn: Callable[[RecoveryAction], None]) -> None:
+        """Subscribe to terminal actions. Called once per action, after the
+        repair has been applied — the topology the listener reads is the
+        repaired one. Registration order is invocation order."""
+        self._listeners.append(fn)
 
     # -- signal ingestion (detect-stage feeds) --------------------------------
 
@@ -187,4 +211,6 @@ class FaultPipeline:
         self.traces.append(PipelineTrace(
             step=step, n_events=len(events),
             verdict=action.verdict, stage_seconds=dict(timings)))
+        for listener in self._listeners:
+            listener(action)
         return [action]

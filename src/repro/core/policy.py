@@ -87,6 +87,13 @@ class LegioPolicy:
     spare_refill_watermark: int = 0
     spare_provision_delay_steps: int = 2
     spare_churn_cap: int = 0            # max re-spawned spares; 0 = unlimited
+    # --- serving (repro.serve): per-node micro-batch size drained from a
+    # legion queue each round, and the redelivery ceiling for a request that
+    # keeps landing on dying nodes (0 = retry forever; the at-least-once
+    # guarantee holds either way — a request that hits the ceiling is parked
+    # in ServeMetrics.parked, never silently dropped).
+    serve_microbatch: int = 4
+    serve_max_attempts: int = 0
 
     def __post_init__(self) -> None:
         if self.recovery_mode not in RECOVERY_MODES:
@@ -99,6 +106,10 @@ class LegioPolicy:
             raise ValueError("spare_provision_delay_steps must be >= 0")
         if self.spare_churn_cap < 0:
             raise ValueError("spare_churn_cap must be >= 0")
+        if self.serve_microbatch <= 0:
+            raise ValueError("serve_microbatch must be positive")
+        if self.serve_max_attempts < 0:
+            raise ValueError("serve_max_attempts must be >= 0")
 
     def choose_k(self, s: int) -> int:
         if self.legion_size > 0:

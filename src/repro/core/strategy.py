@@ -17,6 +17,26 @@ Exhaustion semantics (satellite fix): the non-blocking strategy lands the
 shrink FIRST, then checks the pool — so a strict-mode
 :class:`SparePoolExhausted` always propagates from a *consistent* (shrunk)
 topology, with the committed shrink report attached as ``partial_report``.
+
+Invariants every strategy must preserve (asserted by tests/test_pipeline.py,
+tests/test_substitute.py, and tests/test_serve.py):
+
+  * **one terminal action per fault** — ``repair`` handles each verdict
+    node exactly once; a node it removed (or substituted away) never
+    reappears in a later verdict, so the pipeline emits exactly one
+    terminal RecoveryAction per failed node;
+  * **frozen epochs under pin** — strategies mutate the topology only via
+    its epoch-guarded mutators (``remove``/``substitute``/``expand``/
+    ``compact``), never while a ``TopologyView`` is pinned;
+  * **assignment finality + master rule** — a splice lands in the failed
+    node's home legion, and spare ids always exceed every initial id, so
+    no surviving master is ever demoted;
+  * **no capacity is silently lost** — every failed slot is either
+    substituted, shrunk into ``RepairReport.unfilled`` (and remembered on
+    the provisioner backlog), or scheduled as a ``PendingSubstitution``;
+    downstream consumers (batch plan, serve queues) re-own the slot's
+    work from the report, which is what makes the serve layer's
+    at-least-once re-enqueue possible.
 """
 from __future__ import annotations
 

@@ -1,14 +1,20 @@
-"""Resilient batched-serving driver.
+"""Resilient batched-serving driver — model inference over ``repro.serve``.
 
 The paper's target class — embarrassingly parallel work with no inter-worker
 interaction until the final reduce — is exactly batched inference: every node
 owns a slice of the request stream (prefill + decode), and the only
-collective is the throughput/result aggregation. Failed nodes are discarded
-and their in-flight requests are re-queued to survivors (the serving analogue
-of batch REBALANCE; DROP simply abandons them, the paper's semantics).
+collective is the result gather. The serving subsystem (``repro.serve``)
+owns routing, micro-batching, and fault recovery; this module supplies the
+model-backed work function (prefill + greedy decode) and the CLI.
+
+A fault mid-batch no longer loses the in-flight requests and no longer
+blocks serving: the ServeEngine re-enqueues them through the FaultPipeline
+listener (at-least-once, deduped to exactly-once) while healthy legions
+keep dispatching — see docs/serving.md.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \\
-      --requests 64 --nodes 8 --decode-tokens 8 --fail 2:3
+      --requests 64 --nodes 8 --decode-tokens 8 --fail 2:3 \\
+      --recovery nonblocking
 """
 from __future__ import annotations
 
@@ -23,27 +29,39 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core import FaultInjector, LegioPolicy, VirtualCluster
 from repro.models import api
+from repro.serve import RECOVERY_PRESETS, Request, ServeEngine, recovery_preset
 
 
 class ResilientServer:
-    """Round-based request scheduler over the Legio virtual cluster."""
+    """Model-backed serving: prefill + greedy decode per micro-batch, fault
+    recovery delegated to :class:`repro.serve.ServeEngine`."""
 
     def __init__(self, cfg, cluster: VirtualCluster, *, prompt_len: int = 32,
                  decode_tokens: int = 8, batch_per_node: int = 4,
                  requeue: bool = True):
         self.cfg = cfg
-        self.cluster = cluster
         self.prompt_len = prompt_len
         self.decode_tokens = decode_tokens
-        self.batch_per_node = batch_per_node
-        self.requeue = requeue
         key = jax.random.PRNGKey(0)
         self.params = api.init_params(cfg, key)
         self._prefill = jax.jit(
             lambda p, t: api.prefill(cfg, p, t, prompt_len + decode_tokens))
         self._decode = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, t))
-        self.completed: dict[int, np.ndarray] = {}
-        self.abandoned: list[int] = []
+        # tail batches change shape and recompile the jitted prefill/decode;
+        # that wall-clock noise must not soft-fail healthy nodes as stragglers
+        self.engine = ServeEngine(cluster, self._work_fn,
+                                  microbatch=batch_per_node, requeue=requeue,
+                                  observe_stragglers=False)
+
+    @property
+    def completed(self) -> dict[int, np.ndarray]:
+        return self.engine.completed
+
+    def _work_fn(self, node: int, batch: list[Request],
+                 step: int) -> dict[int, np.ndarray]:
+        rids = [r.rid for r in batch]
+        result = self._work_batch(rids)
+        return {rid: row for rid, row in zip(rids, result)}
 
     def _work_batch(self, request_ids: list[int]) -> np.ndarray:
         """Prefill + greedy-decode a batch of requests; returns token matrix."""
@@ -64,48 +82,23 @@ class ResilientServer:
         return np.asarray(jnp.concatenate(out, axis=1))
 
     def run(self, n_requests: int) -> dict:
-        cl = self.cluster
-        queue = list(range(n_requests))
+        self.engine.submit(n_requests)
         t0 = time.perf_counter()
-        round_idx = 0
-        while queue and cl.live_nodes:
-            cl.inject(round_idx)
-            live = cl.live_nodes
-            if not live:
-                break
-            # EP distribution: consecutive request slices per node
-            assignments: dict[int, list[int]] = {}
-            for i, node in enumerate(live):
-                take = queue[i * self.batch_per_node:(i + 1) * self.batch_per_node]
-                if take:
-                    assignments[node] = take
-            n_assigned = sum(len(v) for v in assignments.values())
-            queue = queue[n_assigned:]
-
-            failed_now = {n for n in cl.topo.nodes if n in cl.failed}
-            for node, reqs in assignments.items():
-                if node in failed_now:
-                    if self.requeue:
-                        queue.extend(reqs)        # REBALANCE analogue
-                    else:
-                        self.abandoned.extend(reqs)  # DROP analogue
-                    continue
-                result = self._work_batch(reqs)
-                for rid, row in zip(reqs, result):
-                    self.completed[rid] = row
-            if failed_now:
-                cl.repair(failed_now)
-            round_idx += 1
+        rep = self.engine.serve()
         wall = time.perf_counter() - t0
+        m = rep.metrics_summary
         return {
-            "completed": len(self.completed),
-            "abandoned": len(self.abandoned),
-            "unserved": len(queue),
-            "rounds": round_idx,
+            "completed": rep.completed,
+            "abandoned": m["abandoned"],
+            "unserved": self.engine.pending,
+            "rounds": rep.rounds,
+            "requeues": m["requeues"],
+            "p50_latency_rounds": m["p50_latency_rounds"],
+            "p99_latency_rounds": m["p99_latency_rounds"],
             "wall_seconds": wall,
-            "survivors": len(cl.live_nodes),
-            "repairs": len(cl.repairs),
-            "throughput_rps": len(self.completed) / wall if wall > 0 else 0.0,
+            "survivors": rep.survivors,
+            "repairs": rep.repairs,
+            "throughput_rps": rep.completed / wall if wall > 0 else 0.0,
         }
 
 
@@ -120,6 +113,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--batch-per-node", type=int, default=4)
     ap.add_argument("--fail", action="append", default=[],
                     help="round:node fault injection (repeatable)")
+    ap.add_argument("--recovery", choices=sorted(RECOVERY_PRESETS),
+                    default="shrink", help="recovery strategy for faults")
     ap.add_argument("--no-requeue", action="store_true",
                     help="DROP failed nodes' requests instead of re-queueing")
     args = ap.parse_args(argv)
@@ -129,13 +124,17 @@ def main(argv: list[str] | None = None) -> int:
     for s in args.fail:
         step, node = s.split(":")
         pairs.append((int(step), int(node)))
+    # batch size flows through the ResilientServer constructor (the engine's
+    # explicit microbatch override); the policy only carries recovery setup
+    policy = LegioPolicy(**recovery_preset(args.recovery))
     cluster = VirtualCluster(
-        args.nodes, policy=LegioPolicy(), injector=FaultInjector.at(pairs))
+        args.nodes, policy=policy, injector=FaultInjector.at(pairs))
     server = ResilientServer(
         cfg, cluster, prompt_len=args.prompt_len,
         decode_tokens=args.decode_tokens, batch_per_node=args.batch_per_node,
         requeue=not args.no_requeue)
-    print(f"[serve] arch={cfg.name} nodes={args.nodes} requests={args.requests}")
+    print(f"[serve] arch={cfg.name} nodes={args.nodes} "
+          f"requests={args.requests} recovery={args.recovery}")
     rep = server.run(args.requests)
     for k, v in rep.items():
         print(f"  {k}: {v if not isinstance(v, float) else round(v, 3)}")

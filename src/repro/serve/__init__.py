@@ -1,0 +1,47 @@
+"""repro.serve — fault-resilient request serving (the Legio shape, served).
+
+Legio's target class is embarrassingly parallel work where failed nodes are
+discarded and the survivors keep going; a request-serving fleet is exactly
+that shape. This package promotes serving to a first-class subsystem over
+the same recovery stack training uses:
+
+  * :class:`RequestRouter` (router) — shards the request stream across
+    legions via the topology masters, least-loaded first, and re-homes
+    queues when a repair changes the ring;
+  * :class:`LegionQueue` / :class:`Request` (queue) — per-legion FIFO work
+    queues; redelivered requests go to the front;
+  * :class:`MicroBatcher` (batcher) — per-node batches sized by
+    ``LegioPolicy.serve_microbatch``;
+  * :class:`ServeEngine` (engine) — the round loop: dispatch against a
+    pinned TopologyView, let faults land mid-flight, drain the
+    FaultPipeline, and re-enqueue every verdict node's in-flight requests
+    through a pipeline listener;
+  * :class:`ServeMetrics` (metrics) — round-latency percentiles, goodput,
+    and per-legion stall accounting.
+
+Invariants the tests assert (tests/test_serve.py):
+
+  * **at-least-once re-enqueue** — a request on a failed node is always
+    redelivered (or explicitly parked/abandoned), never silently lost;
+  * **exactly-once completion** — the dedup guard collapses redeliveries,
+    so the client observes one completion per request id;
+  * **no stall on healthy legions** — serving overlaps repair; a healthy
+    legion with pending work dispatches every round.
+"""
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import (
+    RECOVERY_PRESETS,
+    RoundReport,
+    ServeEngine,
+    ServeReport,
+    recovery_preset,
+)
+from repro.serve.metrics import CompletionRecord, ServeMetrics
+from repro.serve.queue import LegionQueue, Request
+from repro.serve.router import RequestRouter
+
+__all__ = [
+    "CompletionRecord", "LegionQueue", "MicroBatcher", "RECOVERY_PRESETS",
+    "Request", "RequestRouter", "RoundReport", "ServeEngine", "ServeMetrics",
+    "ServeReport", "recovery_preset",
+]

@@ -1,0 +1,303 @@
+"""ServeEngine — fault-resilient request serving over the Legio runtime.
+
+The serving analogue of :class:`LegioExecutor.run_step`: one *round* is the
+step-boundary seam, and everything the executor owns for training shards
+the engine owns for requests. Per round:
+
+  1. boundary — the SpareProvisioner delivers re-spawned spares and
+     warmed-up non-blocking substitutes rejoin (same polls as training);
+  2. dispatch — the :class:`RequestRouter` reconciles its queues against a
+     *pinned* ``TopologyView`` snapshot and the :class:`MicroBatcher` forms
+     per-node batches (``LegioPolicy.serve_microbatch``), recording every
+     dispatched request id in the in-flight registry;
+  3. faults land — injected ground truth arrives *after* dispatch, so a
+     dying node takes its in-flight batch with it (the failure mode the
+     old synchronous loop turned into lost requests);
+  4. execute — healthy nodes complete their batches (dedup guard: a request
+     id completes at most once from the client's view); the result-gather
+     surfaces PROC_FAILED for dead dispatched nodes into the pipeline's
+     collective channel;
+  5. drain — the FaultPipeline runs detect → notice → agree → plan → apply;
+     the engine's pipeline listener re-enqueues every verdict node's
+     in-flight requests (front of the least-loaded surviving legion's
+     queue). Healthy legions dispatched in step 2 and keep dispatching next
+     round — repair never barriers serving (non-blocking substitute path).
+
+Invariants (asserted by tests/test_serve.py):
+
+  * **at-least-once** — a request is never lost: it is in exactly one of
+    {a legion queue, a node's in-flight set, the completed map,
+    metrics.parked, metrics.abandoned} at every round boundary;
+  * **exactly-once completion** — the dedup guard keys on the request id;
+    redeliveries of an already-completed request are suppressed, so the
+    client observes exactly one completion per id;
+  * **no stall on healthy legions** — a legion with pending work and live
+    members dispatches every round, including rounds where another
+    legion's repair is in flight.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.executor import VirtualCluster
+from repro.core.types import FaultSource, RecoveryAction
+from repro.serve.batcher import MicroBatcher
+from repro.serve.metrics import CompletionRecord, ServeMetrics
+from repro.serve.queue import Request
+from repro.serve.router import RequestRouter
+
+# work_fn(node, batch, step) -> {rid: result}
+WorkFn = Callable[[int, list[Request], int], dict[int, Any]]
+
+RECOVERY_PRESETS = ("shrink", "substitute", "nonblocking")
+
+
+def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
+    """Canonical ``LegioPolicy`` overrides for the serving recovery setups —
+    the CLI (launch/serve.py), the benchmark (serve_latency), and the tests
+    share this single source instead of drifting copies."""
+    presets = {
+        "shrink": dict(recovery_mode="shrink"),
+        "substitute": dict(recovery_mode="substitute_then_shrink",
+                           spare_fraction=spare_fraction),
+        "nonblocking": dict(recovery_mode="substitute_then_shrink",
+                            spare_fraction=spare_fraction,
+                            nonblocking_substitution=True),
+    }
+    return presets[name]
+
+
+@dataclass
+class RoundReport:
+    """One serving round, surfaced the way StepReport surfaces a step."""
+
+    step: int
+    dispatched: dict[int, int]               # node -> batch size
+    completed_now: int
+    requeued_now: int
+    actions: tuple[RecoveryAction, ...] = ()
+    respawned: tuple[int, ...] = ()
+    expanded: tuple[tuple[int, int], ...] = ()
+    backlog: int = 0
+    inflight: int = 0
+    wall_seconds: float = 0.0
+
+
+@dataclass
+class ServeReport:
+    """Campaign summary returned by :meth:`ServeEngine.serve`."""
+
+    rounds: int
+    submitted: int
+    completed: int
+    metrics_summary: dict = field(default_factory=dict)
+    survivors: int = 0
+    repairs: int = 0
+
+
+class ServeEngine:
+    """Routes, batches, executes, and redelivers requests transparently."""
+
+    def __init__(
+        self,
+        cluster: VirtualCluster,
+        work_fn: WorkFn,
+        *,
+        microbatch: int | None = None,
+        requeue: bool = True,
+        observe_stragglers: bool = True,
+    ):
+        self.cluster = cluster
+        self.work_fn = work_fn
+        self.requeue = requeue
+        # wall-clock work latency feeds the straggler detector only when the
+        # caller says it is trustworthy — a work_fn that jit-compiles on
+        # batch-shape changes (launch/serve.py) would soft-fail healthy
+        # nodes on compile noise
+        self.observe_stragglers = observe_stragglers
+        self.router = RequestRouter()
+        self.batcher = MicroBatcher(
+            microbatch or cluster.policy.serve_microbatch)
+        self.metrics = ServeMetrics()
+        self.completed: dict[int, Any] = {}      # rid -> result (write-once)
+        self._inflight: dict[int, list[Request]] = {}   # node -> batch
+        self._next_rid = 0
+        self._submitted = 0
+        self.round_count = 0
+        cluster.pipeline.add_listener(self._on_recovery_action)
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(self, payloads: list[Any] | int) -> list[int]:
+        """Enqueue new requests (payloads, or a count of payload-less ones).
+        Returns the assigned request ids."""
+        if isinstance(payloads, int):
+            payloads = [None] * payloads
+        reqs = []
+        for payload in payloads:
+            reqs.append(Request(rid=self._next_rid, payload=payload,
+                                enqueue_step=self.round_count))
+            self._next_rid += 1
+        self._submitted += len(reqs)
+        self.router.submit(reqs, self.cluster.topo.view())
+        return [r.rid for r in reqs]
+
+    @property
+    def pending(self) -> int:
+        return self.router.backlog + sum(
+            len(b) for b in self._inflight.values())
+
+    # -- fault plumbing ------------------------------------------------------
+
+    def _on_recovery_action(self, action: RecoveryAction) -> None:
+        """Pipeline listener: the repair for ``action.verdict`` has been
+        applied — re-enqueue every verdict node's in-flight requests.
+        One topology snapshot covers the whole action (the repair already
+        landed; nothing mutates between redeliveries)."""
+        view = None
+        for node in action.verdict:
+            batch = self._inflight.pop(node, [])
+            if batch and view is None:
+                view = self.cluster.topo.view()
+            for req in batch:
+                self._redeliver(req, view)
+
+    def _redeliver(self, req: Request, view=None) -> None:
+        if req.rid in self.completed:
+            # completed on a previous delivery — the dedup guard keeps the
+            # at-least-once redelivery invisible to the client
+            self.metrics.duplicates_suppressed += 1
+            return
+        if not self.requeue:
+            self.metrics.abandoned.append(req.rid)      # DROP semantics
+            return
+        cap = self.cluster.policy.serve_max_attempts
+        if cap and req.attempts >= cap:
+            self.metrics.parked.append(req.rid)
+            return
+        self.metrics.requeues += 1
+        self.router.requeue(
+            req, view if view is not None else self.cluster.topo.view())
+
+    def _complete(self, req: Request, result: Any, step: int,
+                  node: int) -> None:
+        if req.rid in self.completed:
+            self.metrics.duplicates_suppressed += 1
+            return
+        self.completed[req.rid] = result
+        self.metrics.record_completion(CompletionRecord(
+            rid=req.rid, enqueue_step=req.enqueue_step, complete_step=step,
+            attempts=req.attempts, legion=req.legion if req.legion is not None
+            else -1, node=node))
+
+    # -- one serving round ---------------------------------------------------
+
+    def run_round(self, step: int | None = None) -> RoundReport:
+        cl = self.cluster
+        step = self.round_count if step is None else step
+        t_start = time.perf_counter()
+
+        # 1. boundary: elastic refills + warmed-up substitutes rejoin
+        respawned = cl.poll_provisioner(step)
+        expansions = cl.poll_substitutions(step)
+
+        # 2. dispatch against a pinned snapshot — a repair can neither run
+        #    nor tear the structure while batches are being formed
+        dispatched_sizes: dict[int, int] = {}
+        with cl.topo.pinned() as tv:
+            self.router.reconcile(tv)
+            for lg in tv.legions:
+                members = [n for n in lg.members if n not in cl.failed]
+                if not members:
+                    continue
+                queue = self.router.queue_of(lg.index)
+                for node, batch in self.batcher.form(queue, members).items():
+                    for req in batch:
+                        req.attempts += 1
+                    self._inflight[node] = batch
+                    dispatched_sizes[node] = len(batch)
+                    self.metrics.record_dispatch(step, lg.index, len(batch))
+
+        # 3. faults land mid-flight; the sim clock ticks
+        cl.inject(step)
+        cl.clock.charge(cl.policy.step_sim_seconds)
+
+        # 4. execute — healthy nodes complete, dead ones lose their batch
+        completed_before = len(self.completed)
+        for node in cl.live_nodes:
+            cl.detector.beat(node, cl.clock.sim_seconds)
+        dropped_view = None
+        for node in [n for n in self._inflight if n not in cl.failed]:
+            batch = self._inflight.pop(node)
+            t0 = time.perf_counter()
+            results = self.work_fn(node, batch, step)
+            if self.observe_stragglers:
+                cl.straggler.observe(node, time.perf_counter() - t0)
+            for req in batch:
+                if req.rid in results:
+                    self._complete(req, results[req.rid], step, node)
+                else:
+                    # the work_fn dropped this id (partial result) — that
+                    # is a delivery failure, not a completion: redeliver,
+                    # never record a completion the client didn't get
+                    if dropped_view is None:
+                        dropped_view = cl.topo.view()
+                    self._redeliver(req, dropped_view)
+        lost = {n for n in self._inflight if n in cl.failed
+                and n in cl.topo.nodes}
+        if lost:
+            # the result gather is the serving analogue of the step-final
+            # collective: every surviving dispatched node notices
+            cl.pipeline.observe_collective(
+                "gather", cl.topo.nodes, lost)
+
+        # 5. drain — the listener re-enqueues verdict nodes' batches
+        requeues_before = self.metrics.requeues
+        actions = cl.pipeline.drain(
+            step, sources=(FaultSource.COLLECTIVE, FaultSource.HEARTBEAT))
+        actions = actions + cl.pipeline.drain(
+            step, sources=(FaultSource.STRAGGLER,))
+        # safety net: a dead node whose loss produced no verdict this round
+        # (e.g. no surviving observer) still must not strand its batch —
+        # redeliver now; the heartbeat channel will confirm the node later
+        stranded_view = None
+        for node in [n for n in list(self._inflight) if n in cl.failed]:
+            batch = self._inflight.pop(node)
+            if batch and stranded_view is None:
+                stranded_view = cl.topo.view()
+            for req in batch:
+                self._redeliver(req, stranded_view)
+
+        self.round_count = step + 1
+        return RoundReport(
+            step=step,
+            dispatched=dispatched_sizes,
+            completed_now=len(self.completed) - completed_before,
+            requeued_now=self.metrics.requeues - requeues_before,
+            actions=tuple(actions),
+            respawned=tuple(respawned),
+            expanded=tuple(s for r in expansions for s in r.substitutions),
+            backlog=self.router.backlog,
+            inflight=sum(len(b) for b in self._inflight.values()),
+            wall_seconds=time.perf_counter() - t_start,
+        )
+
+    # -- campaign ------------------------------------------------------------
+
+    def serve(self, max_rounds: int = 10_000) -> ServeReport:
+        """Run rounds until every submitted request is completed (or parked/
+        abandoned), the cluster dies, or ``max_rounds`` is hit."""
+        reports: list[RoundReport] = []
+        while self.pending and self.cluster.live_nodes \
+                and len(reports) < max_rounds:
+            reports.append(self.run_round())
+        return ServeReport(
+            rounds=len(reports),
+            submitted=self._submitted,
+            completed=len(self.completed),
+            metrics_summary=self.metrics.summary(max(len(reports), 1)),
+            survivors=len(self.cluster.live_nodes),
+            repairs=len(self.cluster.repairs),
+        )

@@ -1,0 +1,84 @@
+"""Serving metrics — latency percentiles, goodput, and stall accounting.
+
+Latency is measured in *rounds* (simulated step-latency), not wall seconds:
+the number a client would observe is deterministic given the campaign, so
+tests and benchmarks can assert on it structurally instead of flaking on
+loaded runners. Per-legion dispatch counters expose the non-blocking
+claim directly: a healthy legion's dispatch trace has no zero while a
+repair is in flight elsewhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class CompletionRecord:
+    rid: int
+    enqueue_step: int
+    complete_step: int
+    attempts: int
+    legion: int
+    node: int
+
+    @property
+    def latency_rounds(self) -> int:
+        return self.complete_step - self.enqueue_step
+
+
+@dataclass
+class ServeMetrics:
+    completions: list[CompletionRecord] = field(default_factory=list)
+    requeues: int = 0                    # redeliveries (at-least-once cost)
+    duplicates_suppressed: int = 0       # dedup guard hits
+    parked: list[int] = field(default_factory=list)   # hit serve_max_attempts
+    abandoned: list[int] = field(default_factory=list)  # DROP policy losses
+    # per-round dispatch counts: step -> {legion: n_requests_dispatched}
+    dispatch_trace: dict[int, dict[int, int]] = field(default_factory=dict)
+
+    # -- recording -----------------------------------------------------------
+
+    def record_dispatch(self, step: int, legion: int, n: int) -> None:
+        row = self.dispatch_trace.setdefault(step, {})
+        row[legion] = row.get(legion, 0) + n
+
+    def record_completion(self, rec: CompletionRecord) -> None:
+        self.completions.append(rec)
+
+    # -- aggregates ----------------------------------------------------------
+
+    def latency_percentile(self, p: float,
+                           legions: set[int] | None = None) -> float:
+        """p-th percentile of round-latency, optionally restricted to
+        requests completed by the given legions (nearest-rank method)."""
+        lat = sorted(r.latency_rounds for r in self.completions
+                     if legions is None or r.legion in legions)
+        if not lat:
+            return 0.0
+        rank = min(len(lat) - 1, max(0, int(round(p / 100.0 * len(lat))) - 1))
+        return float(lat[rank])
+
+    def goodput(self, rounds: int) -> float:
+        """Completed requests per round over the campaign."""
+        return len(self.completions) / rounds if rounds else 0.0
+
+    def stalled_rounds(self, legion: int, first: int, last: int) -> int:
+        """Rounds in [first, last] where ``legion`` dispatched nothing.
+        Zero for a healthy legion with pending work — the non-blocking
+        acceptance criterion."""
+        return sum(1 for step in range(first, last + 1)
+                   if self.dispatch_trace.get(step, {}).get(legion, 0) == 0)
+
+    def summary(self, rounds: int) -> dict:
+        return {
+            "completed": len(self.completions),
+            "requeues": self.requeues,
+            "duplicates_suppressed": self.duplicates_suppressed,
+            "parked": len(self.parked),
+            "abandoned": len(self.abandoned),
+            "p50_latency_rounds": self.latency_percentile(50),
+            "p99_latency_rounds": self.latency_percentile(99),
+            "max_attempts_seen": max((r.attempts for r in self.completions),
+                                     default=0),
+            "goodput_rps": self.goodput(rounds),
+        }

@@ -1,0 +1,60 @@
+"""Per-legion work queues — the unit of request ownership.
+
+A request belongs to exactly one legion queue at a time (or to a node's
+in-flight set, or to the completed map — never two of these at once; the
+engine's accounting test walks every round asserting it). Queues are FIFO
+with one exception: a re-enqueued request (its node died mid-batch) goes to
+the *front*, so redelivery latency does not compound the fault latency.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class Request:
+    """One client request flowing through the serve subsystem.
+
+    ``rid`` is the client-visible identity the dedup guard keys on;
+    ``attempts`` counts deliveries (1 = never touched a failed node).
+    """
+
+    rid: int
+    payload: Any = None
+    enqueue_step: int = 0
+    attempts: int = 0
+    legion: int | None = None      # current owning legion (router-assigned)
+
+
+@dataclass
+class LegionQueue:
+    """FIFO request queue owned by one legion."""
+
+    legion: int
+    _q: deque = field(default_factory=deque)
+
+    def push(self, req: Request) -> None:
+        req.legion = self.legion
+        self._q.append(req)
+
+    def push_front(self, req: Request) -> None:
+        """Redelivery path: re-enqueued requests skip the line."""
+        req.legion = self.legion
+        self._q.appendleft(req)
+
+    def pop_batch(self, n: int) -> list[Request]:
+        take = []
+        while self._q and len(take) < n:
+            take.append(self._q.popleft())
+        return take
+
+    def drain(self) -> list[Request]:
+        """Empty the queue (legion left the ring — requests re-route)."""
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)

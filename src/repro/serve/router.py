@@ -1,0 +1,72 @@
+"""RequestRouter — shards the request stream across legions.
+
+Routing reads the topology the same way everything else in the runtime
+does: through an epoch-stamped :class:`TopologyView` snapshot, keyed by the
+legion masters (the global_comm membership — one router entry per master,
+exactly the paper's hierarchy). Requests go to the least-loaded live
+legion; after a repair changes the ring, :meth:`reconcile` re-homes the
+queues of legions that left it, so no request is ever stranded on a
+structure that no longer exists.
+"""
+from __future__ import annotations
+
+from repro.serve.queue import LegionQueue, Request
+
+
+class RequestRouter:
+    """Least-loaded sharding of requests over the live legions."""
+
+    def __init__(self):
+        self.queues: dict[int, LegionQueue] = {}
+        self.rerouted: int = 0          # requests re-homed by reconcile()
+
+    # -- topology tracking ---------------------------------------------------
+
+    def _live_legions(self, view) -> list[int]:
+        return [lg.index for lg in view.legions if lg.members]
+
+    def reconcile(self, view) -> list[Request]:
+        """Sync queues with a topology snapshot. Queues for legions that
+        left the ring are drained and their requests resubmitted; returns
+        the re-homed requests (metrics count them)."""
+        live = set(self._live_legions(view))
+        orphans: list[Request] = []
+        for idx in [i for i in self.queues if i not in live]:
+            orphans.extend(self.queues.pop(idx).drain())
+        for idx in live:
+            self.queues.setdefault(idx, LegionQueue(legion=idx))
+        if orphans:
+            self.rerouted += len(orphans)
+            for req in orphans:
+                self._route(req, front=True)
+        return orphans
+
+    # -- submission ----------------------------------------------------------
+
+    def _route(self, req: Request, *, front: bool = False) -> None:
+        if not self.queues:
+            raise RuntimeError("no live legions to route to")
+        target = min(self.queues.values(), key=lambda q: (len(q), q.legion))
+        (target.push_front if front else target.push)(req)
+
+    def submit(self, requests: list[Request], view) -> None:
+        """Shard new requests across the live legions, least-loaded first."""
+        self.reconcile(view)
+        for req in requests:
+            self._route(req)
+
+    def requeue(self, req: Request, view) -> None:
+        """Redeliver a request whose node died mid-batch: front of the
+        least-loaded *surviving* legion's queue (its old legion may be the
+        one that just shrank — reconcile first)."""
+        self.reconcile(view)
+        self._route(req, front=True)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def backlog(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def queue_of(self, legion: int) -> LegionQueue:
+        return self.queues[legion]

@@ -1,0 +1,33 @@
+"""Every example under examples/ imports cleanly and exposes main().
+
+Import-only by design: the walkthroughs themselves are budgeted at ~60 s
+each (resilient_training regressed past that once — the cap is now part of
+its contract), which is example-runner territory, not tier-1. An import
+still catches the common breakage: a renamed symbol in repro.* that an
+example references.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+EXAMPLES_DIR = pathlib.Path(__file__).parent.parent / "examples"
+EXAMPLE_FILES = sorted(EXAMPLES_DIR.glob("*.py"))
+
+
+def _load(path: pathlib.Path):
+    spec = importlib.util.spec_from_file_location(f"example_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_examples_exist():
+    assert len(EXAMPLE_FILES) >= 7
+
+
+@pytest.mark.parametrize("path", EXAMPLE_FILES, ids=lambda p: p.stem)
+def test_example_imports_and_has_main(path):
+    mod = _load(path)
+    assert callable(getattr(mod, "main", None)), \
+        f"{path.name} must expose a main() entry point"

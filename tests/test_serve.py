@@ -1,0 +1,254 @@
+"""Serve subsystem: at-least-once re-enqueue, exactly-once completion,
+no stall on healthy legions — for every recovery mode."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import FaultInjector, LegioPolicy, VirtualCluster
+from repro.serve import (
+    RECOVERY_PRESETS as MODES,
+    Request,
+    RequestRouter,
+    ServeEngine,
+    recovery_preset,
+)
+
+
+def work(node, batch, step):
+    return {r.rid: float(r.rid) for r in batch}
+
+
+def make_engine(n=16, mode="shrink", faults=(), microbatch=3, **kw):
+    pol = LegioPolicy(legion_size=4, serve_microbatch=microbatch,
+                      **recovery_preset(mode, spare_fraction=0.5))
+    cl = VirtualCluster(n, policy=pol,
+                        injector=FaultInjector.at(list(faults)))
+    return ServeEngine(cl, work, **kw)
+
+
+def queued_rids(engine):
+    return {r.rid for q in engine.router.queues.values() for r in q._q}
+
+
+def inflight_rids(engine):
+    return {r.rid for b in engine._inflight.values() for r in b}
+
+
+# ---------------------------------------------------------------------------
+# property: no request is lost or double-completed across an injected fault
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+def test_no_request_lost_or_double_completed(data):
+    mode = data.draw(st.sampled_from(sorted(MODES)))
+    n = data.draw(st.integers(8, 24))
+    n_fail = data.draw(st.integers(1, min(4, n - 4)))
+    victims = data.draw(st.permutations(list(range(n))))[:n_fail]
+    steps = data.draw(st.lists(st.integers(0, 4),
+                               min_size=n_fail, max_size=n_fail))
+    total = data.draw(st.integers(20, 120))
+    eng = make_engine(n=n, mode=mode, faults=list(zip(steps, victims)))
+    eng.submit(total)
+    rep = eng.serve(max_rounds=200)
+    # exactly-once from the client's view: every id, once, no extras
+    assert sorted(eng.completed) == list(range(total))
+    assert rep.completed == total
+    m = rep.metrics_summary
+    assert m["parked"] == 0 and m["abandoned"] == 0
+    # completions are unique per id in the metrics ledger too
+    seen = [r.rid for r in eng.metrics.completions]
+    assert len(seen) == len(set(seen))
+
+
+# ---------------------------------------------------------------------------
+# deterministic coverage of the same property (runs without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_zero_loss_across_fault_each_mode(mode):
+    """A mid-campaign fault with batches in flight loses nothing: the
+    verdict node's requests are re-enqueued (at-least-once) and every id
+    completes exactly once."""
+    eng = make_engine(mode=mode, faults=[(1, 5), (2, 0)])
+    eng.submit(150)
+    rep = eng.serve(max_rounds=100)
+    assert sorted(eng.completed) == list(range(150))
+    m = rep.metrics_summary
+    assert m["requeues"] > 0, "faults landed mid-flight: must redeliver"
+    assert m["duplicates_suppressed"] == 0
+    assert m["max_attempts_seen"] >= 2   # a redelivered request completed
+    rids = [r.rid for r in eng.metrics.completions]
+    assert len(rids) == len(set(rids)) == 150
+
+
+def test_request_accounting_invariant_every_round():
+    """At every round boundary each request id is in exactly one bucket:
+    queued, in-flight, or completed (the queue.py ownership invariant)."""
+    eng = make_engine(mode="nonblocking", faults=[(1, 3), (3, 8)])
+    eng.submit(90)
+    submitted = set(range(90))
+    for _ in range(40):
+        if not eng.pending:
+            break
+        eng.run_round()
+        q, f, c = queued_rids(eng), inflight_rids(eng), set(eng.completed)
+        assert q | f | c == submitted
+        assert not (q & f) and not (q & c) and not (f & c)
+    assert set(eng.completed) == submitted
+
+
+# ---------------------------------------------------------------------------
+# dedup guard: redelivery of a completed request is suppressed
+# ---------------------------------------------------------------------------
+
+def test_dedup_guard_suppresses_double_completion():
+    eng = make_engine()
+    eng.submit(4)
+    eng.run_round()
+    assert 0 in eng.completed
+    ghost = Request(rid=0, enqueue_step=0, attempts=1)
+    eng._redeliver(ghost)                    # stale redelivery of a done id
+    assert eng.metrics.duplicates_suppressed == 1
+    assert eng.metrics.requeues == 0
+    assert len(eng.completed) == 4           # nothing re-entered the system
+
+
+def test_partial_work_result_redelivers_not_completes():
+    """A work_fn that drops an id (partial result dict) is a delivery
+    failure: the request redelivers instead of completing as None."""
+    first_try_dropped = []
+
+    def flaky(node, batch, step):
+        out = {}
+        for r in batch:
+            if r.rid == 7 and r.attempts == 1:
+                first_try_dropped.append(r.rid)
+                continue
+            out[r.rid] = float(r.rid)
+        return out
+
+    cl = VirtualCluster(16, policy=LegioPolicy(legion_size=4,
+                                               serve_microbatch=3))
+    eng = ServeEngine(cl, flaky)
+    eng.submit(30)
+    eng.serve(max_rounds=20)
+    assert first_try_dropped == [7]
+    assert eng.completed[7] == 7.0          # real result, via redelivery
+    assert sorted(eng.completed) == list(range(30))
+    assert eng.metrics.requeues >= 1
+
+
+def test_completed_results_are_write_once():
+    eng = make_engine()
+    eng.submit(2)
+    eng.run_round()
+    first = eng.completed[1]
+    eng._complete(Request(rid=1, enqueue_step=0), -999.0, 1, 0)
+    assert eng.completed[1] == first
+    assert eng.metrics.duplicates_suppressed == 1
+
+
+# ---------------------------------------------------------------------------
+# DROP (requeue=False) and the redelivery ceiling
+# ---------------------------------------------------------------------------
+
+def test_drop_mode_abandons_instead_of_requeueing():
+    eng = make_engine(faults=[(0, 2)], requeue=False)
+    eng.submit(48)
+    rep = eng.serve(max_rounds=50)
+    m = rep.metrics_summary
+    assert m["abandoned"] > 0 and m["requeues"] == 0
+    assert rep.completed + m["abandoned"] == 48
+    assert not set(eng.metrics.abandoned) & set(eng.completed)
+
+
+def test_max_attempts_parks_not_drops():
+    pol = LegioPolicy(legion_size=4, serve_microbatch=3,
+                      serve_max_attempts=1)
+    cl = VirtualCluster(16, policy=pol,
+                        injector=FaultInjector.at([(0, 5)]))
+    eng = ServeEngine(cl, work)
+    eng.submit(48)
+    eng.serve(max_rounds=50)
+    parked = set(eng.metrics.parked)
+    assert parked, "requests on the dead node hit the ceiling"
+    assert not parked & set(eng.completed)
+    assert parked | set(eng.completed) == set(range(48))
+
+
+# ---------------------------------------------------------------------------
+# router: queues survive topology changes
+# ---------------------------------------------------------------------------
+
+def test_whole_legion_death_rehomes_its_queue():
+    """All members of one legion die in one round — its undispatched queue
+    must re-home to surviving legions, not strand."""
+    eng = make_engine(faults=[(0, 4), (0, 5), (0, 6), (0, 7)], microbatch=1)
+    eng.submit(160)                      # deep queues: plenty undispatched
+    rep = eng.serve(max_rounds=200)
+    assert rep.completed == 160
+    assert eng.router.rerouted > 0, "the dead legion's queue was re-homed"
+    assert all(idx != 1 for idx in eng.router.queues), \
+        "legion 1 left the ring; its queue must be gone"
+
+
+def test_router_least_loaded_sharding():
+    router = RequestRouter()
+    cl = VirtualCluster(16, policy=LegioPolicy(legion_size=4))
+    reqs = [Request(rid=i) for i in range(40)]
+    router.submit(reqs, cl.topo.view())
+    sizes = {i: len(q) for i, q in router.queues.items()}
+    assert sum(sizes.values()) == 40
+    assert max(sizes.values()) - min(sizes.values()) <= 1
+
+
+# ---------------------------------------------------------------------------
+# e2e: a mid-campaign fault keeps p99 bounded on healthy legions
+# ---------------------------------------------------------------------------
+
+def test_e2e_p99_bounded_on_healthy_legions():
+    """Structural acceptance (no wall-clock): during the repair, legions
+    untouched by the fault keep dispatching every round, and their
+    round-latency p99 does not exceed the campaign-wide p99 — serving
+    overlaps the repair instead of barriering on it."""
+    faults = [(2, 1), (3, 5)]
+    eng = make_engine(mode="nonblocking", faults=faults, microbatch=2)
+    cl = eng.cluster
+    submitted = 0
+    rounds = 0
+    while submitted < 240 or eng.pending:
+        if rounds < 8:
+            eng.submit(30)
+            submitted += 30
+        eng.run_round()
+        rounds += 1
+        assert rounds < 100
+    assert sorted(eng.completed) == list(range(240))
+
+    fault_legions = {cl.topo.home[v] for _, v in faults}
+    healthy = [lg.index for lg in cl.topo.legions
+               if lg.members and lg.index not in fault_legions]
+    assert healthy, "the campaign must leave untouched legions"
+    # no stall: every repair-window round dispatched on every healthy legion
+    for lg in healthy:
+        assert eng.metrics.stalled_rounds(lg, 2, 4) == 0
+    p99_all = eng.metrics.latency_percentile(99)
+    p99_healthy = eng.metrics.latency_percentile(99, set(healthy))
+    assert p99_healthy <= p99_all
+    # the repaired cluster is back at full capacity (nonblocking splices)
+    assert cl.topo.size == 16
+
+
+def test_healthy_legions_dispatch_during_repair_round():
+    """The round that repairs legion L still dispatches real batches on
+    every other legion (the RoundReport shows both in one round)."""
+    eng = make_engine(mode="nonblocking", faults=[(1, 5)])
+    eng.submit(200)
+    eng.run_round()                                   # round 0: warm
+    rep = eng.run_round()                             # round 1: fault + repair
+    assert any(5 in a.verdict for a in rep.actions)
+    victim_legion = eng.cluster.topo.home[5]
+    dispatched_legions = {
+        eng.cluster.topo.home.get(n, victim_legion)
+        for n in rep.dispatched}
+    assert len(dispatched_legions - {victim_legion}) >= 3, \
+        "all other legions dispatched in the repair round"

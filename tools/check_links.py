@@ -1,0 +1,64 @@
+"""Docs link-checker: dead relative links in docs/ or README fail the build.
+
+Scans markdown files for inline links and validates every *relative* target
+(path exists, rooted at the linking file's directory). External URLs and
+in-page anchors are skipped — this is a structure check, not a crawler.
+
+  python tools/check_links.py            # README.md + docs/**/*.md
+  python tools/check_links.py FILE...    # explicit file list
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+# inline markdown links, excluding images; badge-style nested [![...]] links
+# are caught by the inner [...]() too
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def default_files() -> list[pathlib.Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        # "../../actions/..." style badge links point above the repo on
+        # purpose (GitHub resolves them server-side) — out of scope
+        resolved = (md.parent / path).resolve()
+        if not resolved.is_relative_to(REPO):
+            continue
+        if not resolved.exists():
+            line = text[:m.start()].count("\n") + 1
+            errors.append(f"{md.relative_to(REPO)}:{line}: dead link "
+                          f"-> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = ([pathlib.Path(a).resolve() for a in argv]
+             if argv else default_files())
+    errors = []
+    for md in files:
+        errors += check_file(md)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[docs] {len(files)} file(s) checked, {len(errors)} dead link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
