@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint docs bench-quick bench install-dev
+.PHONY: test lint docs bench-quick bench bench-json install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -17,8 +17,13 @@ docs:
 	$(PYTHON) tools/check_links.py
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
+# + N-level scoped-repair scaling
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 optimal_k
+	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling
+
+# same smoke, plus machine-readable results in BENCH_PR4.json (CI artifact)
+bench-json:
+	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -2,10 +2,20 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
+  PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
+                                                     # + machine-readable
+                                                     #   BENCH_PR4.json
+
+``--json`` records per-suite status/wall-seconds (and whatever dict a
+suite's ``main()`` returns) to ``BENCH_PR4.json`` — the CI artifact. The
+asserts inside the suites stay structural (the bench-smoke convention);
+the JSON is for dashboards, not pass/fail.
 """
 from __future__ import annotations
 
+import json
 import sys
+import time
 import traceback
 
 from benchmarks.common import section
@@ -18,25 +28,48 @@ SUITES = [
     ("fig11_nas_ep", "benchmarks.app_ep", "Fig. 11"),
     ("fig12_docking", "benchmarks.app_docking", "Fig. 12"),
     ("eq3_4_optimal_k", "benchmarks.optimal_k", "Eq. 3/4"),
+    ("hierarchy_scaling", "benchmarks.hierarchy_scaling", "§V scalability"),
     ("repair_recompile", "benchmarks.repair_recompile", "beyond-paper"),
     ("serve_latency", "benchmarks.serve_latency", "beyond-paper"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
 ]
 
+JSON_PATH = "BENCH_PR4.json"
+
 
 def main() -> int:
-    filters = [a.lower() for a in sys.argv[1:]]
+    args = sys.argv[1:]
+    write_json = "--json" in args
+    filters = [a.lower() for a in args if not a.startswith("--")]
     failures = []
+    results: list[dict] = []
     for key, module, anchor in SUITES:
         if filters and not any(f in key for f in filters):
             continue
         with section(f"{key} ({anchor})"):
+            t0 = time.perf_counter()
+            entry = {"suite": key, "anchor": anchor, "status": "ok"}
             try:
                 mod = __import__(module, fromlist=["main"])
-                mod.main()
+                data = mod.main()
+                if isinstance(data, dict):
+                    entry["data"] = data
             except Exception:
                 traceback.print_exc()
                 failures.append(key)
+                entry["status"] = "failed"
+            entry["wall_seconds"] = round(time.perf_counter() - t0, 3)
+            results.append(entry)
+    if write_json:
+        payload = {
+            "suites": results,
+            "failed": failures,
+            "ok": not failures,
+        }
+        with open(JSON_PATH, "w") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+        print(f"\n[benchmarks] wrote {JSON_PATH} "
+              f"({len(results)} suite(s), {len(failures)} failure(s))")
     print(f"\n[benchmarks] {'ALL OK' if not failures else 'FAILED: ' + ', '.join(failures)}")
     return 1 if failures else 0
 

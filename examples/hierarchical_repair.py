@@ -2,8 +2,10 @@
 
 Builds the paper's exact topology figure (16 processes, k=4), kills a
 master, and prints every repair stage with its communicator, participants,
-and S(x) model cost — then compares against the flat shrink and sweeps the
-cluster size to show the crossover the paper derives in Eq. 2.
+and S(x) model cost — then compares against the flat shrink, sweeps the
+cluster size to show the crossover the paper derives in Eq. 2, and shows
+the N-level generalization: the same master fault at depth 3 repairs a
+bounded subtree instead of dragging in every master.
 
   PYTHONPATH=src python examples/hierarchical_repair.py
 """
@@ -39,6 +41,18 @@ def main() -> None:
         hier = eng.expected_repair_cost(s, k)
         print(f"{s:6d} {k:4d} {flat:10.3f} {hier:10.3f} "
               f"{flat / hier:5.1f}x")
+
+    # -- the N-level generalization: scoped repair at depth 3 ---------------
+    deep = LegionTopology.build(list(range(64)), 4, depth=3)
+    victim = deep.legions[-1].master            # master of legion 15 only
+    scope = deep.partition_scopes({victim})[0]
+    print(f"\ndepth-3 topology (64 nodes, k=4): killing node {victim} "
+          f"(a legion master)")
+    print(f"  repair scope: {scope.summary()}")
+    print(f"  comms touched: {list(scope.groups)}")
+    print("  every node outside those comms keeps computing — at depth 2 "
+          "the same fault\n  would shrink the 16-master global_comm; flat, "
+          "all 63 survivors")
 
 
 if __name__ == "__main__":

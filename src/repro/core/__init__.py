@@ -50,6 +50,8 @@ from repro.core.executor import (
 from repro.core.hierarchy import (
     Legion,
     LegionTopology,
+    LevelGroup,
+    StaleLegionError,
     TopologyTornError,
     TopologyView,
     make_topology,
@@ -62,6 +64,7 @@ from repro.core.policy import (
     eq4_s_of_k,
     optimal_k_linear,
     optimal_k_quadratic,
+    optimal_kd,
 )
 from repro.core.shrink import ShrinkCostModel, ShrinkEngine, failures_by_legion
 from repro.core.strategy import (
@@ -94,6 +97,7 @@ from repro.core.types import (
     PipelineTrace,
     RecoveryAction,
     RepairReport,
+    RepairScope,
     RepairStep,
 )
 
@@ -102,12 +106,13 @@ __all__ = [
     "FaultEvent", "FaultInjector", "FaultPipeline", "FaultSource",
     "HeartbeatDetector", "HierarchicalCollectives",
     "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
-    "LegioPolicy", "LinkModel", "MeshManager", "NodeState",
+    "LegioPolicy", "LevelGroup", "LinkModel", "MeshManager", "NodeState",
     "NonblockingSubstituteStrategy", "OpStatus", "PendingSubstitution",
     "PipelineTrace", "RecoveryAction", "RecoveryStrategy", "RepairReport",
-    "RepairStep", "ResilientTrainer", "RootFailedError", "ShrinkCostModel",
-    "ShrinkEngine", "ShrinkStrategy", "SparePool", "SparePoolExhausted",
-    "SpareProvisioner", "StepReport", "StragglerDetector",
+    "RepairScope", "RepairStep", "ResilientTrainer", "RootFailedError",
+    "ShrinkCostModel", "ShrinkEngine", "ShrinkStrategy", "SparePool",
+    "SparePoolExhausted", "SpareProvisioner", "StaleLegionError",
+    "StepReport", "StragglerDetector",
     "SubstituteCostModel", "SubstituteEngine", "SubstituteStrategy",
     "TopologyTornError", "TopologyView", "TrainerReport", "UnfilledSlot",
     "VirtualCluster", "agree_fault", "agreement_rounds", "agreement_time",
@@ -115,7 +120,8 @@ __all__ = [
     "gradient_scale", "hierarchical_psum", "hierarchical_psum_scatter",
     "initial_assignment", "liveness_psum", "make_hierarchical_allreduce",
     "make_strategy", "make_topology", "make_train_step", "notice_fault",
-    "optimal_k_linear", "optimal_k_quadratic", "eq3_s_of_k", "eq4_s_of_k",
+    "optimal_k_linear", "optimal_k_quadratic", "optimal_kd",
+    "eq3_s_of_k", "eq4_s_of_k",
     "reassign", "register_strategy", "restore_for_substitute", "restore_rank",
     "substitute_assign", "validate_plan",
 ]

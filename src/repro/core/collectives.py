@@ -51,12 +51,19 @@ LOCAL_ONLY = "local_only"
 class LinkModel:
     """alpha (s) / beta (B/s) per link class. Defaults: ICI-ish intra,
     DCI-ish cross (an order of magnitude slower — why the hierarchical
-    schedule confines bulk traffic to fast links)."""
+    schedule confines bulk traffic to fast links).
+
+    ``level_slowdown`` is the per-level cost accounting knob for depth >= 3
+    topologies: a hop at level ℓ >= 1 is ``level_slowdown**(ℓ-1)`` times
+    dearer than the first cross hop (rack -> pod -> data-center fabrics each
+    slower than the one below). 1.0 (the default) keeps every cross-level
+    hop identical — the depth-2 model unchanged."""
 
     alpha_intra: float = 1.0e-6
     beta_intra: float = 50.0e9        # ~ICI per-link
     alpha_cross: float = 10.0e-6
     beta_cross: float = 5.0e9         # ~DCI / data-center network
+    level_slowdown: float = 1.0
 
     def tree_time(self, participants: int, nbytes: int, cross: bool) -> float:
         if participants <= 1:
@@ -65,6 +72,15 @@ class LinkModel:
         a = self.alpha_cross if cross else self.alpha_intra
         b = self.beta_cross if cross else self.beta_intra
         return rounds * (a + nbytes / b)
+
+    def level_time(self, participants: int, nbytes: int, level: int) -> float:
+        """Binomial-tree time for one hop at hierarchy ``level`` — level 0
+        rides fast intra-legion links, every level above rides cross links,
+        scaled by ``level_slowdown`` per additional level."""
+        t = self.tree_time(participants, nbytes, cross=level >= 1)
+        if level >= 2 and self.level_slowdown != 1.0:
+            t *= self.level_slowdown ** (level - 1)
+        return t
 
 
 @dataclass
@@ -124,7 +140,15 @@ class HierarchicalCollectives:
         stages.append((comm, n, t))
         return t
 
-    # -- one-to-all (Bcast): root legion -> global -> other legions (Fig. 4) ----
+    def _lstage(self, stages, comm, n, nbytes, level):
+        """Stage with per-level cost accounting: level 0 = fast intra links,
+        level >= 1 = (progressively) slow cross-level hops."""
+        t = self.link.level_time(n, nbytes, level)
+        stages.append((comm, n, t))
+        return t
+
+    # -- one-to-all (Bcast): the root's chain climbs the levels, then every
+    #    subtree propagates downward in parallel (Fig. 4, applied per level) --
 
     def bcast(self, root: int, payload: np.ndarray) -> CollectiveResult:
         topo = self.topo
@@ -139,28 +163,47 @@ class HierarchicalCollectives:
                 data[n] = payload
             return CollectiveResult("bcast", t_total, data, stages)
         root_lg = topo.legion_of(root)
-        # 1. root's local_comm
-        t_total += self._stage(stages, f"local_{root_lg.index}", len(root_lg),
-                               nbytes, cross=False)
+        # 1. up-chain: root's local_comm, then the group containing the root
+        #    at every level — each hop hands the payload to that comm's
+        #    members (the masters of the level below)
+        t_total += self._lstage(stages, f"local_{root_lg.index}",
+                                len(root_lg), nbytes, level=0)
         for n in root_lg.members:
             data[n] = payload
-        # 2. global_comm (masters) — the cross-legion hop
-        masters = topo.masters
-        t_total += self._stage(stages, "global", len(masters), nbytes, cross=True)
-        for m in masters:
-            data[m] = payload
-        # 3. all other local_comms in parallel (max over legions)
+        chain = [root_lg.index]                 # group index per level
+        for level, groups in enumerate(topo.levels(), start=1):
+            g = next(g for g in groups if chain[-1] in g.children)
+            t_total += self._lstage(stages, topo.comm_name(level, g.index),
+                                    len(g.members), nbytes, level=level)
+            for m in g.members:
+                data[m] = payload
+            chain.append(g.index)
+        # 2. down-sweep: levels depth-2 .. 1 then the legions — at each level
+        #    every group off the root chain broadcasts within itself, all
+        #    groups of a level in parallel (max over the level)
+        for level in range(topo.depth - 2, 0, -1):
+            t_par = 0.0
+            for g in topo.groups(level):
+                if g.index == chain[level]:
+                    continue                     # delivered by the up-chain
+                t = self._lstage(stages, topo.comm_name(level, g.index),
+                                 len(g.members), nbytes, level=level)
+                t_par = max(t_par, t)
+                for m in g.members:
+                    data[m] = payload
+            t_total += t_par
         t_par = 0.0
         for lg in topo.legions:
             if lg.index == root_lg.index or not lg.members:
                 continue
-            t = self._stage(stages, f"local_{lg.index}", len(lg), nbytes, cross=False)
+            t = self._lstage(stages, f"local_{lg.index}", len(lg), nbytes,
+                             level=0)
             t_par = max(t_par, t)
             for n in lg.members:
                 data[n] = payload
         return CollectiveResult("bcast", t_total + t_par, data, stages)
 
-    # -- all-to-one (Reduce): reverse propagation (Fig. 4) ----------------------
+    # -- all-to-one (Reduce): reverse propagation, level by level ---------------
 
     def reduce(self, root: int, contributions: dict[int, np.ndarray],
                op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add
@@ -176,6 +219,7 @@ class HierarchicalCollectives:
                 [contributions[n] for n in lg.members if n in contributions], op)
             return CollectiveResult("reduce", t, {root: total}, stages)
         # 1. each local_comm reduces to its master — in parallel
+        t_total = 0.0
         t_par = 0.0
         partials: dict[int, np.ndarray] = {}
         for lg in topo.legions:
@@ -186,29 +230,53 @@ class HierarchicalCollectives:
                 # whole legion is silent this step (e.g. a just-spliced spare
                 # that has not computed yet) — it simply contributes nothing
                 continue
-            t = self._stage(stages, f"local_{lg.index}", len(lg), nbytes, cross=False)
+            t = self._lstage(stages, f"local_{lg.index}", len(lg), nbytes,
+                             level=0)
             t_par = max(t_par, t)
             partials[lg.master] = _tree_reduce(parts, op)
-        # 2. global_comm reduces master partials to the root's master —
-        #    the slow hop: compress here (sum-compatible ops only)
-        masters = [m for m in topo.masters if m in partials]
-        cross_bytes = nbytes
-        if self.compression != "none" and op in (np.add,):
-            sent = [self._compress_cross(m, partials[m]) for m in masters]
-            total = _tree_reduce([s[0] for s in sent], op)
-            cross_bytes = max(s[1] for s in sent)
-        else:
-            total = _tree_reduce([partials[m] for m in masters], op)
-        t_cross = self._stage(stages, "global", len(masters), cross_bytes,
-                              cross=True)
+        t_total += t_par
+        if not partials:
+            # every contributor has left the topology (e.g. the whole
+            # verdict of a drain) — surface a clear collective error, not a
+            # bare StopIteration from the level walk below
+            raise ValueError(
+                "reduce: no surviving contributor is present in the "
+                f"topology (epoch {getattr(topo, 'epoch', '?')}, "
+                f"{len(contributions)} contribution(s) offered)")
+        # 2. every level reduces its groups' member partials to the group
+        #    master, groups of a level in parallel. The first cross hop
+        #    (level 1) rides the slowest relative gap — compression applies
+        #    there (sum-compatible ops only); upper hops carry the already-
+        #    reduced partials
+        for level, groups in enumerate(topo.levels(), start=1):
+            t_par = 0.0
+            next_partials: dict[int, np.ndarray] = {}
+            for g in groups:
+                contributing = [m for m in g.members if m in partials]
+                if not contributing:
+                    continue
+                gbytes = nbytes
+                if level == 1 and self.compression != "none" and op in (np.add,):
+                    sent = [self._compress_cross(m, partials[m])
+                            for m in contributing]
+                    reduced = _tree_reduce([s[0] for s in sent], op)
+                    gbytes = max(s[1] for s in sent)
+                else:
+                    reduced = _tree_reduce(
+                        [partials[m] for m in contributing], op)
+                t = self._lstage(stages, topo.comm_name(level, g.index),
+                                 len(contributing), gbytes, level=level)
+                t_par = max(t_par, t)
+                next_partials[g.master] = reduced
+            t_total += t_par
+            partials = next_partials
+        total = next(iter(partials.values()))
         # 3. if the root is not its legion's master, one intra hop delivers it
         root_lg = topo.legion_of(root)
-        t_last = 0.0
         if root != root_lg.master:
-            t_last = self._stage(stages, f"local_{root_lg.index}", 2, nbytes,
-                                 cross=False)
-        return CollectiveResult("reduce", t_par + t_cross + t_last,
-                                {root: total}, stages)
+            t_total += self._lstage(stages, f"local_{root_lg.index}", 2,
+                                    nbytes, level=0)
+        return CollectiveResult("reduce", t_total, {root: total}, stages)
 
     # -- all-to-all (AllReduce) = all-to-one + one-to-all (paper §V) -----------
 

@@ -64,6 +64,7 @@ from repro.core.types import (
     FaultSource,
     RecoveryAction,
     RepairReport,
+    RepairScope,
     RepairStep,
 )
 
@@ -201,7 +202,8 @@ class VirtualCluster:
         if self.provisioner.enabled:
             self.backlog.append(slot)
 
-    def repair(self, verdict: set[int]) -> RepairReport | None:
+    def repair(self, verdict: set[int],
+               scope: "RepairScope | None" = None) -> RepairReport | None:
         """Apply the registered RecoveryStrategy for the agreed verdict.
 
         The strategy mutates the structures; this method owns the
@@ -213,20 +215,71 @@ class VirtualCluster:
         """
         if not verdict:
             return None
+        if scope is None:
+            scopes = self.topo.partition_scopes(set(verdict))
+            scope = scopes[0] if len(scopes) == 1 else None
         try:
             report = self.strategy.repair(self, set(verdict))
         except SparePoolExhausted as exc:
             if exc.partial_report is not None:
+                self._stamp_scope(exc.partial_report, scope)
                 self._commit_repair(verdict, exc.partial_report)
             raise
+        self._stamp_scope(report, scope)
         self._commit_repair(verdict, report)
         return report
 
-    def _commit_repair(self, verdict: set[int], report: RepairReport) -> None:
+    def repair_scoped(self, scopes: "list[RepairScope]"
+                      ) -> "list[tuple[RepairScope, RepairReport]]":
+        """Apply the strategy once per disjoint :class:`RepairScope`.
+
+        The scopes partition one drain's verdict into subtrees with
+        pairwise-disjoint participant sets, so their repairs proceed
+        concurrently: the simulated clock is charged the *maximum* scope
+        cost, not the sum — healthy subtrees (and the faster of two
+        concurrent repairs) never wait on an unrelated subtree's recovery
+        (Bouteiller & Bosilca's non-blocking argument applied across
+        subtrees). Bookkeeping per scope is identical to :meth:`repair`.
+        """
+        out: list[tuple[RepairScope, RepairReport]] = []
+        worst = 0.0
+        for scope in scopes:
+            verdict = set(scope.verdict)
+            if not verdict:
+                continue
+            try:
+                report = self.strategy.repair(self, verdict)
+            except SparePoolExhausted as exc:
+                if exc.partial_report is not None:
+                    self._stamp_scope(exc.partial_report, scope)
+                    self._commit_repair(verdict, exc.partial_report,
+                                        charge=False)
+                    worst = max(worst, exc.partial_report.model_cost)
+                if worst:
+                    self.clock.charge(worst)
+                raise
+            self._stamp_scope(report, scope)
+            self._commit_repair(verdict, report, charge=False)
+            worst = max(worst, report.model_cost)
+            out.append((scope, report))
+        if worst:
+            self.clock.charge(worst)
+        return out
+
+    @staticmethod
+    def _stamp_scope(report: RepairReport,
+                     scope: "RepairScope | None") -> None:
+        if scope is not None and report.scope is None:
+            report.scope = scope
+            report.repair_participants = scope.n_participants
+
+    def _commit_repair(self, verdict: set[int], report: RepairReport,
+                       charge: bool = True) -> None:
         for n in verdict:
             self.detector.confirm_failed(n)
             self.straggler.drop(n)
-        self.clock.charge(report.model_cost)
+        if charge:
+            self.clock.charge(report.model_cost)
         self.repairs.append(report)
 
     # -- deferred (non-blocking) substitution --------------------------------

@@ -1,26 +1,45 @@
-"""Legion topology — the paper's hierarchical communicator organization (§V).
+"""Legion topology — the paper's hierarchical communicator organization (§V),
+generalized from the fixed {flat, 2-level} pair to a recursive N-level tree.
 
 The target communicator (our cluster of nodes) is split into disjoint
 ``local_comm``s (*legions*) of max size ``k``: node with rank ``r`` belongs to
 legion ``r // k`` — the assignment is final (paper: "The assignment of a
-process to a local_comm is final"). A ``global_comm`` holds one *master* per
-legion (the lowest surviving rank). Each legion also has a *POV*
-(Partially-OVerlapped) communicator: its members plus the master of its
-*successor* legion, used exclusively during repair (paper Fig. 2). The last
-legion's successor is the first (a ring).
+process to a local_comm is final"). Above level 0 the structure recurses:
+the masters of every ``k`` adjacent legions form a *super-legion* at level 1,
+the masters of every ``k`` super-legions form a level-2 group, and so on,
+until a single root comm closes the tree at level ``depth - 1``. Each
+non-root level has a POV (Partially-OVerlapped) ring: group *i*'s POV is its
+members plus the master of its *successor* group at the same level, used
+exclusively during repair (paper Fig. 2, applied per level). ``depth == 2``
+is exactly the paper's layout (legions + one global_comm of masters);
+``depth == 1`` is the degenerate flat mode.
 
-Properties the paper claims — each is asserted by property tests:
+Grouping above level 0 is derived from the *final* legion indices
+(legion ``i`` lives under level-ℓ group ``i // k**ℓ``), so the paper's
+assignment-finality extends to every level: repairs never migrate a subtree.
+
+Properties the paper claims — each is asserted by property tests, now at
+every depth:
   (a) #communicators scales linearly with #nodes;
-  (b) every node can reach any other (directly or via masters);
-  (c) there is exactly one master-path between any two legions.
+  (b) every node can reach any other (directly or via its master chain);
+  (c) there is exactly one master-path between any two nodes.
+
+Scoped repair (Rocco & Palermo 2022): a fault only forces the repair of the
+communicators that actually contain it — :meth:`LegionTopology.fault_groups`
+computes that minimal set by climbing the failed node's mastership chain,
+and :meth:`LegionTopology.partition_scopes` folds an agreed verdict into
+disjoint :class:`~repro.core.types.RepairScope`\\ s whose repairs can proceed
+concurrently (disjoint participant sets — healthy subtrees never enter the
+repair path).
 """
 from __future__ import annotations
 
 from contextlib import contextmanager
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Iterator
 
 from repro.core.policy import LegioPolicy
+from repro.core.types import RepairScope
 
 
 class TopologyTornError(RuntimeError):
@@ -28,6 +47,13 @@ class TopologyTornError(RuntimeError):
     :class:`TopologyView` is pinned — the invariant ULFM gets for free from
     ``MPIX_Comm_shrink``'s collectivity (every participant enters the repair,
     so no collective can be mid-flight on the old structure)."""
+
+
+class StaleLegionError(KeyError):
+    """A group index that no longer names a live group at its level —
+    typically a legion that emptied and left the ring. Raised by
+    ``successor``/``predecessor``/``pov`` (and their ``*_at`` generalizations)
+    instead of leaking a bare ``StopIteration`` from an internal search."""
 
 
 @dataclass
@@ -39,6 +65,31 @@ class Legion:
     @property
     def master(self) -> int:
         """Paper: the master is the process with the lowest rank."""
+        return min(self.members)
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+
+@dataclass(frozen=True)
+class LevelGroup:
+    """One communicator of the recursive hierarchy at ``level``.
+
+    At level 0 this is a live legion viewed as a group (members are node
+    ids, no children). At level ℓ ≥ 1 the members are the masters of the
+    child groups at level ℓ-1 and ``children`` carries those groups'
+    indices. The top level (``depth - 1``) is a single root group — the
+    generalization of the paper's global_comm.
+    """
+
+    level: int
+    index: int
+    members: tuple[int, ...]
+    children: tuple[int, ...] = ()
+
+    @property
+    def master(self) -> int:
+        """Lowest rank of the subtree (min of mins) — the paper's rule."""
         return min(self.members)
 
     def __len__(self) -> int:
@@ -57,21 +108,42 @@ class LegionTopology:
     # the structure behind an epoch-stamped TopologyView and pin it, so a
     # mid-pipeline repair can never tear a structure a collective is reading
     epoch: int = 0
+    # number of levels including the root comm: 1 = flat, 2 = the paper's
+    # legions + global_comm, d >= 3 adds super-legion levels in between
+    depth: int = 2
     _pins: int = field(default=0, init=False, repr=False)
+    # member -> Legion index kept coherent across every mutation: legion_of
+    # is on the serve router's and collectives' hot path (O(1), not a scan)
+    _by_member: dict[int, Legion] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _levels_cache: list[list[LevelGroup]] = field(
+        default_factory=list, init=False, repr=False, compare=False)
+    _levels_epoch: int = field(default=-1, init=False, repr=False,
+                               compare=False)
+
+    def __post_init__(self) -> None:
+        self._reindex()
+
+    def _reindex(self) -> None:
+        self._by_member = {n: lg for lg in self.legions for n in lg.members}
 
     # ---- construction ----------------------------------------------------
 
     @staticmethod
-    def build(nodes: list[int], k: int) -> "LegionTopology":
+    def build(nodes: list[int], k: int, depth: int = 2) -> "LegionTopology":
         nodes = sorted(nodes)
         if k <= 0:
             raise ValueError(f"legion size k must be positive, got {k}")
+        if depth < 1:
+            raise ValueError(f"hierarchy depth must be >= 1, got {depth}")
+        if depth == 1:
+            return LegionTopology.flat(nodes)
         legions = [
             Legion(index=i, members=nodes[i * k:(i + 1) * k])
             for i in range((len(nodes) + k - 1) // k)
         ]
         home = {n: i for i, lg in enumerate(legions) for n in lg.members}
-        return LegionTopology(k=k, legions=legions, home=home)
+        return LegionTopology(k=k, legions=legions, home=home, depth=depth)
 
     @staticmethod
     def flat(nodes: list[int]) -> "LegionTopology":
@@ -79,7 +151,7 @@ class LegionTopology:
         nodes = sorted(nodes)
         lg = Legion(index=0, members=list(nodes))
         return LegionTopology(k=max(len(nodes), 1), legions=[lg],
-                              home={n: 0 for n in nodes})
+                              home={n: 0 for n in nodes}, depth=1)
 
     # ---- views -------------------------------------------------------------
 
@@ -97,59 +169,291 @@ class LegionTopology:
 
     @property
     def masters(self) -> list[int]:
-        """The global_comm membership."""
+        """The level-1 comm membership (one master per live legion)."""
         return [lg.master for lg in self.legions if lg.members]
 
     def legion_of(self, node: int) -> Legion:
-        for lg in self.legions:
-            if node in lg.members:
-                return lg
-        raise KeyError(f"node {node} not in topology")
+        try:
+            return self._by_member[node]
+        except KeyError:
+            raise KeyError(f"node {node} not in topology") from None
 
     def is_master(self, node: int) -> bool:
-        return any(lg.members and lg.master == node for lg in self.legions)
+        lg = self._by_member.get(node)
+        return lg is not None and lg.master == node
+
+    # ---- recursive levels ----------------------------------------------------
+
+    def levels(self) -> list[list[LevelGroup]]:
+        """Live groups at levels ``1 .. depth-1`` (index 0 of the returned
+        list is level 1; the last entry is the single-group root comm).
+        Derived from the level-0 structure on demand and cached per epoch,
+        so mutations only ever touch the legions and the derivation can
+        never drift out of sync."""
+        if self._levels_epoch == self.epoch:
+            return self._levels_cache
+        out: list[list[LevelGroup]] = []
+        child_index = [lg.index for lg in self.legions if lg.members]
+        child_master = {lg.index: lg.master
+                        for lg in self.legions if lg.members}
+        for level in range(1, self.depth):
+            buckets: dict[int, list[int]] = {}
+            if level == self.depth - 1:
+                # root comm: one group over every surviving child master
+                buckets[0] = list(child_index)
+            else:
+                for ci in child_index:
+                    buckets.setdefault(ci // self.k, []).append(ci)
+            groups = [
+                LevelGroup(
+                    level=level, index=gi,
+                    members=tuple(sorted(child_master[ci] for ci in children)),
+                    children=tuple(sorted(children)))
+                for gi, children in sorted(buckets.items())
+            ]
+            out.append(groups)
+            child_index = [g.index for g in groups]
+            child_master = {g.index: g.master for g in groups}
+        self._levels_cache, self._levels_epoch = out, self.epoch
+        return out
+
+    def groups(self, level: int) -> list[LevelGroup]:
+        """Live groups at ``level`` (0 = legions wrapped as groups)."""
+        if level == 0:
+            return [LevelGroup(level=0, index=lg.index,
+                               members=tuple(lg.members))
+                    for lg in self.legions if lg.members]
+        lv = self.levels()
+        if not 1 <= level <= len(lv):
+            raise StaleLegionError(
+                f"level {level} does not exist (depth {self.depth})")
+        return lv[level - 1]
+
+    def group_at(self, level: int, index: int) -> LevelGroup:
+        for g in self.groups(level):
+            if g.index == index:
+                return g
+        raise StaleLegionError(
+            f"no live group {index} at level {level} "
+            f"(depth {self.depth}, epoch {self.epoch})")
+
+    def parent_of(self, level: int, index: int) -> LevelGroup:
+        """The level+1 group containing group ``index`` of ``level``."""
+        for g in self.groups(level + 1):
+            if index in g.children:
+                return g
+        raise StaleLegionError(
+            f"group {index} at level {level} has no parent "
+            f"(depth {self.depth}, epoch {self.epoch})")
+
+    def master_chain(self, node: int) -> list[int]:
+        """The node's masters at levels 0..depth-1 (legion master first,
+        root master last) — the unique relay chain of property (b)."""
+        lg = self.legion_of(node)
+        chain, idx = [lg.master], lg.index
+        for groups in self.levels():
+            g = next((g for g in groups if idx in g.children), None)
+            if g is None:
+                raise StaleLegionError(
+                    f"group {idx} lost its parent (epoch {self.epoch})")
+            chain.append(g.master)
+            idx = g.index
+        return chain
+
+    def subtree_of(self, legion_index: int) -> int:
+        """Index of the top-level subtree (child group of the root comm)
+        containing the legion — what the serve router shards over. For
+        depth <= 2 every legion hangs off the root directly."""
+        if self.depth <= 2:
+            return legion_index
+        idx = legion_index
+        for groups in self.levels()[:-1]:       # exclude the root comm
+            g = next((g for g in groups if idx in g.children), None)
+            if g is None:
+                raise StaleLegionError(
+                    f"legion {legion_index} not under any live subtree "
+                    f"(epoch {self.epoch})")
+            idx = g.index
+        return idx
+
+    # ---- per-level POV rings --------------------------------------------------
+
+    def comm_name(self, level: int, index: int) -> str:
+        """Canonical name of a group comm — the single source for the
+        strings repair steps and collective stages are keyed on
+        (``local_i`` / ``l{level}_{i}`` / ``global`` for the root)."""
+        if level == 0:
+            return f"local_{index}"
+        if level == self.depth - 1:
+            return "global"
+        return f"l{level}_{index}"
+
+    def pov_name(self, level: int, index: int) -> str:
+        """Canonical name of a POV comm (``pov_i`` / ``l{level}_pov_{i}``)."""
+        return f"pov_{index}" if level == 0 else f"l{level}_pov_{index}"
+
+    def successor_at(self, level: int, index: int) -> LevelGroup:
+        order = self.groups(level)
+        for i, g in enumerate(order):
+            if g.index == index:
+                return order[(i + 1) % len(order)]
+        raise StaleLegionError(
+            f"group {index} at level {level} is not in the ring "
+            f"(emptied or never existed; epoch {self.epoch})")
+
+    def predecessor_at(self, level: int, index: int) -> LevelGroup:
+        order = self.groups(level)
+        for i, g in enumerate(order):
+            if g.index == index:
+                return order[(i - 1) % len(order)]
+        raise StaleLegionError(
+            f"group {index} at level {level} is not in the ring "
+            f"(emptied or never existed; epoch {self.epoch})")
+
+    def pov_at(self, level: int, index: int) -> list[int]:
+        """POV of group ``index`` at ``level``: its members plus the master
+        of the successor group at the same level (paper Fig. 2, per level)."""
+        g = self.group_at(level, index)
+        members = list(g.members)
+        succ = self.successor_at(level, index)
+        if succ.index != index and succ.members:
+            members.append(succ.master)
+        return sorted(members)
 
     def successor(self, legion_index: int) -> Legion:
         order = [lg for lg in self.legions if lg.members]
-        pos = next(i for i, lg in enumerate(order) if lg.index == legion_index)
-        return order[(pos + 1) % len(order)]
+        for i, lg in enumerate(order):
+            if lg.index == legion_index:
+                return order[(i + 1) % len(order)]
+        raise StaleLegionError(
+            f"legion {legion_index} is not in the ring "
+            f"(emptied or never existed; epoch {self.epoch})")
 
     def predecessor(self, legion_index: int) -> Legion:
         order = [lg for lg in self.legions if lg.members]
-        pos = next(i for i, lg in enumerate(order) if lg.index == legion_index)
-        return order[(pos - 1) % len(order)]
+        for i, lg in enumerate(order):
+            if lg.index == legion_index:
+                return order[(i - 1) % len(order)]
+        raise StaleLegionError(
+            f"legion {legion_index} is not in the ring "
+            f"(emptied or never existed; epoch {self.epoch})")
 
     def pov(self, legion_index: int) -> list[int]:
         """POV_i = members of legion i + master of the successor (paper Fig. 2)."""
-        lg = next(l for l in self.legions if l.index == legion_index)
-        members = list(lg.members)
-        succ = self.successor(legion_index)
-        if succ.index != legion_index and succ.members:
-            members.append(succ.master)
-        return sorted(members)
+        return self.pov_at(0, legion_index)
 
     def povs(self) -> dict[int, list[int]]:
         return {lg.index: self.pov(lg.index) for lg in self.legions if lg.members}
 
     def n_communicators(self) -> int:
-        """world + per-legion local_comm + per-legion POV + global  — O(n/k)·2+2,
-        i.e. linear in the number of nodes (paper property (a))."""
-        live = [lg for lg in self.legions if lg.members]
-        return 1 + len(live) + len(live) + 1
+        """world + per-group comm + per-group POV at every ring level + the
+        root comm. Every level has at most ceil(n / k^(level+1)) groups, so
+        the total stays linear in the number of nodes (paper property (a))."""
+        total = 2                               # world + root comm
+        for level in range(max(self.depth - 1, 1)):
+            total += 2 * len(self.groups(level))
+        return total
 
     def path(self, src: int, dst: int) -> list[int]:
         """The unique minimal master-relay path (paper property (b)/(c)):
-        src -> master(src) -> master(dst) -> dst, collapsing duplicates."""
+        climb src's master chain to the lowest level whose group contains
+        both endpoints, hop across that comm, descend dst's chain. For
+        depth 2 this is exactly src -> master(src) -> master(dst) -> dst,
+        collapsing duplicates."""
         ls, ld = self.legion_of(src), self.legion_of(dst)
         hops = [src]
         if ls.index == ld.index:
             if dst != src:
                 hops.append(dst)
             return hops
-        for nxt in (ls.master, ld.master, dst):
+        # group-index chains at levels 0..depth-1 (root shared by construction)
+        gs, gd = [ls.index], [ld.index]
+        for groups in self.levels():
+            gs.append(next(g.index for g in groups if gs[-1] in g.children))
+            gd.append(next(g.index for g in groups if gd[-1] in g.children))
+        meet = next(i for i in range(len(gs)) if gs[i] == gd[i])
+        chain_s, chain_d = self.master_chain(src), self.master_chain(dst)
+        for nxt in chain_s[:meet] + list(reversed(chain_d[:meet])) + [dst]:
             if hops[-1] != nxt:
                 hops.append(nxt)
         return hops
+
+    # ---- scoped repair (Rocco & Palermo: confine repair to the fault) --------
+
+    def fault_groups(self, node: int) -> set[tuple[int, int]]:
+        """The minimal set of ``(level, group index)`` comms whose repair the
+        failure of ``node`` forces. A worker fault touches only its legion;
+        a master fault adds the level-0 ring neighbours' POVs and the parent
+        comm, and keeps climbing exactly as long as the dead node also held
+        the mastership of the group above."""
+        lg = self.legion_of(node)
+        touched = {(0, lg.index)}
+        if self.depth <= 1 or len(self.masters) <= 1:
+            return touched
+        level, idx, master = 0, lg.index, lg.master
+        while master == node and level < self.depth - 1:
+            ring = self.groups(level)
+            if len(ring) > 1:
+                touched.add((level, self.predecessor_at(level, idx).index))
+                touched.add((level, self.successor_at(level, idx).index))
+            parent = self.parent_of(level, idx)
+            touched.add((level + 1, parent.index))
+            level, idx, master = level + 1, parent.index, parent.master
+        return touched
+
+    def partition_scopes(self, verdict: set[int]) -> list[RepairScope]:
+        """Fold an agreed verdict into disjoint :class:`RepairScope`\\ s.
+        Scopes whose touched comms intersect are merged (their repairs share
+        participants and must serialize); the rest are disjoint subtrees
+        that repair concurrently. Verdict nodes no longer in the topology
+        (a spare that died warm, a node a previous drain already removed)
+        ride along on the first scope so the one-terminal-action-per-fault
+        invariant holds for them too."""
+        present = [n for n in sorted(verdict)
+                   if n in self.home and n in self._by_member]
+        absent = sorted(set(verdict) - set(present))
+        # merge on PARTICIPANT overlap, not just shared comms: a node that
+        # must enter two repairs (e.g. a legion master pulled into both its
+        # local shrink and a neighbour's root-comm shrink at depth 2)
+        # serializes them — only truly participant-disjoint scopes may
+        # claim concurrency
+        components: list[tuple[set[int], set[tuple[int, int]], set[int]]] = []
+        for n in present:
+            groups = set(self.fault_groups(n))
+            participants: set[int] = set()
+            for lvl, gi in groups:
+                participants.update(self.group_at(lvl, gi).members)
+            components.append(({n}, groups, participants))
+        changed = len(components) > 1
+        while changed:                  # transitive closure of the merge
+            changed = False
+            merged: list[tuple[set[int], set[tuple[int, int]], set[int]]] = []
+            for nodes, groups, parts in components:
+                for i, (m_nodes, m_groups, m_parts) in enumerate(merged):
+                    if (m_parts & parts) or (m_groups & groups):
+                        merged[i] = (m_nodes | nodes, m_groups | groups,
+                                     m_parts | parts)
+                        changed = True
+                        break
+                else:
+                    merged.append((nodes, groups, parts))
+            components = merged
+        scopes = []
+        for nodes, groups, participants in components:
+            participants -= set(verdict)
+            scopes.append(RepairScope(
+                verdict=tuple(sorted(nodes)),
+                level=max(lvl for lvl, _ in groups),
+                groups=tuple(sorted(groups)),
+                participants=tuple(sorted(participants))))
+        if absent:
+            if scopes:
+                scopes[0] = replace(scopes[0], verdict=tuple(
+                    sorted(set(scopes[0].verdict) | set(absent))))
+            else:
+                scopes = [RepairScope(verdict=tuple(absent), level=0,
+                                      groups=(), participants=())]
+        return scopes
 
     # ---- snapshots (epoch discipline) ---------------------------------------
 
@@ -184,6 +488,7 @@ class LegionTopology:
         self._mutating()
         was_master = lg.master == node
         lg.members.remove(node)
+        del self._by_member[node]
         return lg.index, was_master
 
     def compact(self) -> None:
@@ -207,6 +512,8 @@ class LegionTopology:
         lg.members.remove(failed)
         lg.members.append(spare)
         lg.members.sort()
+        del self._by_member[failed]
+        self._by_member[spare] = lg
         self.home[spare] = lg.index
         return lg.index
 
@@ -214,7 +521,7 @@ class LegionTopology:
         """Re-admit a slot at ``legion_index`` for ``node`` (the deferred half
         of a non-blocking substitution). If the legion left the ring when it
         emptied, it rejoins at its original position — index order is ring
-        order, so the POV ring stays consistent."""
+        order at every level, so the POV rings stay consistent."""
         if node in self.home:
             raise ValueError(f"node {node} already belongs to legion "
                              f"{self.home[node]} — assignment is final")
@@ -229,6 +536,7 @@ class LegionTopology:
             pos = next((i for i, other in enumerate(self.legions)
                         if other.index > legion_index), len(self.legions))
             self.legions.insert(pos, lg)
+        self._by_member[node] = lg
         self.home[node] = legion_index
 
 
@@ -252,6 +560,7 @@ class TopologyView:
                      for lg in topo.legions],
             home=dict(topo.home),
             epoch=topo.epoch,
+            depth=topo.depth,
         )
 
     def __getattr__(self, name: str):
@@ -268,12 +577,16 @@ class TopologyView:
 
     def __repr__(self) -> str:
         return (f"TopologyView(epoch={self.epoch}, size={self._snap.size}, "
-                f"legions={self._snap.n_legions})")
+                f"legions={self._snap.n_legions}, depth={self._snap.depth})")
 
 
 def make_topology(nodes: list[int], policy: LegioPolicy) -> LegionTopology:
-    """Paper-faithful entry point: hierarchical iff size > threshold (s > 11)."""
+    """Paper-faithful entry point: hierarchical iff size > threshold
+    (s > 11), with the depth chosen by ``policy.choose_kd`` — 2 levels in
+    the paper's regime, deeper once the master comm itself outgrows the
+    threshold (or whatever ``policy.hierarchy_depth`` pins)."""
     s = len(nodes)
-    if policy.use_hierarchical(s):
-        return LegionTopology.build(nodes, policy.choose_k(s))
-    return LegionTopology.flat(nodes)
+    k, depth = policy.choose_kd(s)
+    if depth <= 1:
+        return LegionTopology.flat(nodes)
+    return LegionTopology.build(nodes, k, depth=depth)

@@ -16,14 +16,20 @@ step-boundary seam:
               node can read);
     agree   — unify the observers' suspicion sets into one verdict
               (agreement.agree_fault — the BNP fix);
-    plan    — select the registered RecoveryStrategy and partition the
-              verdict into crash vs straggle soft-fails;
-    apply   — soft-fail stragglers, run the strategy via
-              ``VirtualCluster.repair`` (which owns confirm/charge/record).
+    plan    — select the registered RecoveryStrategy, partition the verdict
+              into crash vs straggle soft-fails, and fold it into disjoint
+              :class:`RepairScope` subtrees (the minimal communicator sets
+              that contain each fault — Rocco & Palermo's scoped reparation);
+    apply   — soft-fail stragglers, run the strategy once per scope via
+              ``VirtualCluster.repair_scoped`` (which owns
+              confirm/charge/record; disjoint scopes are charged as
+              concurrent — max cost, not sum).
 
-Each drain emits at most one terminal :class:`RecoveryAction` covering the
-agreed verdict, with per-stage wall latencies recorded on the action and in
-``traces`` (benchmarks/repair_time.py reads the breakdown).
+Each drain emits one terminal :class:`RecoveryAction` per disjoint scope —
+the scopes partition the agreed verdict, so every failed node still appears
+in exactly one terminal action. Per-stage wall latencies are recorded on
+every action and in ``traces`` (benchmarks/repair_time.py reads the
+breakdown).
 
 Invariants (asserted by tests/test_pipeline.py and tests/test_serve.py):
 
@@ -55,6 +61,7 @@ from repro.core.types import (
     FaultSource,
     PipelineTrace,
     RecoveryAction,
+    RepairScope,
 )
 
 if TYPE_CHECKING:
@@ -140,21 +147,26 @@ class FaultPipeline:
     def _agree(self, observations: dict[int, set[int]]) -> set[int]:
         return agree_fault(observations, self.cluster.live_nodes)
 
-    def _plan(self, verdict: set[int],
-              events: list[FaultEvent]) -> tuple[str, set[int]]:
-        """Select the strategy and mark which verdict nodes are performance
-        faults that must be soft-failed before repair."""
+    def _plan(self, verdict: set[int], events: list[FaultEvent]
+              ) -> tuple[str, set[int], list[RepairScope]]:
+        """Select the strategy, mark which verdict nodes are performance
+        faults that must be soft-failed before repair, and partition the
+        verdict into disjoint :class:`RepairScope`\\ s — the minimal
+        subtrees whose members must participate. Faults in unrelated
+        subtrees land in separate scopes and repair concurrently."""
         straggle = set()
         for e in events:
             if e.kind is FailureKind.STRAGGLE:
                 straggle |= set(e.nodes) & verdict
-        return self.cluster.strategy.name, straggle
+        scopes = self.cluster.topo.partition_scopes(verdict)
+        return self.cluster.strategy.name, straggle, scopes
 
-    def _apply(self, verdict: set[int], straggle: set[int]):
+    def _apply(self, verdict: set[int], straggle: set[int],
+               scopes: list[RepairScope]):
         cl = self.cluster
         for n in straggle:
             cl.failed.add(n)                     # soft-fail (discard policy)
-        return cl.repair(verdict)
+        return cl.repair_scoped(scopes)
 
     # -- orchestration --------------------------------------------------------
 
@@ -190,27 +202,33 @@ class FaultPipeline:
             gate(verdict)
 
         t0 = time.perf_counter()
-        strategy_name, straggle = self._plan(verdict, events)
+        strategy_name, straggle, scopes = self._plan(verdict, events)
         timings["plan"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        report = self._apply(verdict, straggle)
+        repaired = self._apply(verdict, straggle, scopes)
         timings["apply"] = time.perf_counter() - t0
 
-        action = RecoveryAction(
-            step=step,
-            verdict=tuple(sorted(verdict)),
-            strategy=strategy_name,
-            sources=tuple(sorted({e.source for e in events},
-                                 key=lambda s: s.value)),
-            report=report,
-            terminal=True,
-            stage_seconds=timings,
-        )
-        self.actions.append(action)
+        sources = tuple(sorted({e.source for e in events},
+                               key=lambda s: s.value))
+        actions = [
+            RecoveryAction(
+                step=step,
+                verdict=scope.verdict,
+                strategy=strategy_name,
+                sources=sources,
+                report=report,
+                terminal=True,
+                stage_seconds=dict(timings),
+                scope=scope,
+            )
+            for scope, report in repaired
+        ]
+        self.actions.extend(actions)
         self.traces.append(PipelineTrace(
             step=step, n_events=len(events),
-            verdict=action.verdict, stage_seconds=dict(timings)))
-        for listener in self._listeners:
-            listener(action)
-        return [action]
+            verdict=tuple(sorted(verdict)), stage_seconds=dict(timings)))
+        for action in actions:
+            for listener in self._listeners:
+                listener(action)
+        return actions

@@ -49,6 +49,21 @@ def eq4_s_of_k(k: int) -> float:
     return math.sqrt(2.0 * k * k * (2.0 * k * k - 1.0) / 3.0)
 
 
+def optimal_kd(s: int, depth: int) -> int:
+    """Generalize Eq. 3/4's optimal-k to the (k, d) pair of the recursive
+    N-level topology: with ``depth - 1`` grouping levels of branching
+    factor k over s nodes, the levels balance (every comm, legions and
+    super-legions alike, has ~k members) at ``k ≈ s^(1/depth)``. For
+    depth 2 the paper's Eq. 3 relation is kept verbatim."""
+    if depth <= 1:
+        return max(s, 1)
+    if depth == 2:
+        return optimal_k_linear(s)
+    if s <= 2:
+        return max(s, 1)
+    return max(2, round(s ** (1.0 / depth)))
+
+
 RECOVERY_MODES = ("shrink", "substitute", "substitute_then_shrink")
 
 
@@ -56,6 +71,13 @@ RECOVERY_MODES = ("shrink", "substitute", "substitute_then_shrink")
 class LegioPolicy:
     legion_size: int = 0                # k; 0 = auto via Eq. 3 (paper's setting)
     hierarchical_threshold: int = 12    # paper: hierarchy wins for s > 11 (linear S)
+    # levels of the recursive topology including the root comm: 1 = flat,
+    # 2 = the paper's legions + global_comm, d >= 3 inserts super-legion
+    # levels (masters grouped k at a time) between legions and root.
+    # 0 = auto: 2 in the paper's regime, one level deeper every time the
+    # master comm itself outgrows hierarchical_threshold (the paper's own
+    # rule applied recursively to the comm it creates).
+    hierarchy_depth: int = 0
     root_failure_policy: str = "ignore" # ignore | stop (paper §IV)
     batch_policy: str = "drop"          # drop | rebalance
     straggler_threshold: float = 3.0    # x median step latency; 0 disables
@@ -96,6 +118,8 @@ class LegioPolicy:
     serve_max_attempts: int = 0
 
     def __post_init__(self) -> None:
+        if self.hierarchy_depth < 0:
+            raise ValueError("hierarchy_depth must be >= 0 (0 = auto)")
         if self.recovery_mode not in RECOVERY_MODES:
             raise ValueError(
                 f"recovery_mode must be one of {RECOVERY_MODES}, "
@@ -115,6 +139,37 @@ class LegioPolicy:
         if self.legion_size > 0:
             return min(self.legion_size, s)
         return min(optimal_k_linear(s), s)
+
+    def choose_depth(self, s: int) -> int:
+        """How many levels the topology gets for an s-node cluster. Explicit
+        ``hierarchy_depth`` wins; auto applies the paper's threshold rule
+        recursively — whenever the comm of masters a level creates is itself
+        big enough that hierarchy would win inside it, add a level."""
+        if self.hierarchy_depth > 0:
+            return self.hierarchy_depth if s > 1 else 1
+        if not self.use_hierarchical(s):
+            return 1
+        k = max(self.choose_k(s), 2)
+        depth, top = 2, math.ceil(s / k)
+        while top > self.hierarchical_threshold:
+            nxt = math.ceil(top / k)
+            if nxt <= 1:
+                break
+            depth, top = depth + 1, nxt
+        return depth
+
+    def choose_kd(self, s: int) -> tuple[int, int]:
+        """The (legion size, depth) pair the topology builder uses —
+        Eq. 3's optimal-k generalized to the recursive layout. With an
+        explicit ``legion_size`` the depth adapts around it; with both
+        knobs on auto, depth is chosen first and k balances the levels
+        (``optimal_kd``)."""
+        depth = self.choose_depth(s)
+        if depth <= 1:
+            return max(s, 1), 1
+        if self.legion_size > 0:
+            return min(self.legion_size, s), depth
+        return min(optimal_kd(s, depth), s), depth
 
     def use_hierarchical(self, s: int) -> bool:
         return s > self.hierarchical_threshold

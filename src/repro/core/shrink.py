@@ -101,6 +101,14 @@ class ShrinkEngine:
         Multi-failure: the paper treats each failure independently; we fold
         simultaneous failures legion-by-legion (one local shrink per affected
         legion; master steps only for legions that lost their master).
+
+        Scoped repair (Rocco & Palermo): a master failure climbs the levels
+        of the recursive topology exactly as far as the dead node held
+        masterships — at each affected level the ring neighbours' POVs and
+        the *parent group's* comm shrink, never the whole master set. At
+        depth 2 the parent group IS the paper's global_comm, reproducing
+        Fig. 3 verbatim; at depth >= 3 the participant count is bounded by
+        O(k·depth), independent of the cluster size.
         """
         steps: list[RepairStep] = []
         hierarchical = topo.n_legions > 1
@@ -114,51 +122,81 @@ class ShrinkEngine:
 
         for li, dead in sorted(failures_by_legion(topo, failed).items()):
             lg = next(l for l in topo.legions if l.index == li)
-            master_failed = lg.master in dead
             local_survivors = tuple(n for n in lg.members if n not in failed)
-            k = len(lg.members)
             # 1. local shrink — members noticed directly
             steps.append(RepairStep(
                 op="shrink", comm=f"local_{li}", participants=local_survivors,
-                cost_units=self.cost.s_of_x(k),
+                cost_units=self.cost.s_of_x(len(lg.members)),
             ))
-            if not master_failed:
+            if lg.master not in dead:
                 continue
-            pred = topo.predecessor(li)
-            succ = topo.successor(li)
-            # 2. predecessor master notifies its POV, then it shrinks
-            pred_pov = tuple(n for n in topo.pov(pred.index) if n not in failed)
-            steps.append(RepairStep(
-                op="notify", comm=f"pov_{pred.index}",
-                participants=(pred.master,), cost_units=0.0,
-            ))
-            steps.append(RepairStep(
-                op="shrink", comm=f"pov_{pred.index}", participants=pred_pov,
-                cost_units=self.cost.s_of_x(k + 1),
-            ))
-            # 3. own POV shrink (contains the failed master's legion + succ master)
-            own_pov = tuple(n for n in topo.pov(li) if n not in failed)
-            steps.append(RepairStep(
-                op="shrink", comm=f"pov_{li}", participants=own_pov,
-                cost_units=self.cost.s_of_x(k + 1),
-            ))
-            # 4. global shrink
-            masters = tuple(m for m in topo.masters if m not in failed)
-            steps.append(RepairStep(
-                op="shrink", comm="global", participants=masters,
-                cost_units=self.cost.s_of_x(topo.n_legions),
-            ))
-            # 5. promote + include the new master (via succ POV link)
-            if local_survivors:
-                new_master = min(local_survivors)
+            dead_master = lg.master
+            level, idx = 0, li
+            group_members: tuple[int, ...] = tuple(lg.members)
+            promoted: int | None = None    # child master promoted one level down
+            while level < topo.depth - 1:
+                ring = topo.groups(level)
+                k_here = len(group_members)
+                succ = None
+                if len(ring) > 1:
+                    pred = topo.predecessor_at(level, idx)
+                    succ = topo.successor_at(level, idx)
+                    # 2. predecessor master notifies its POV, then it shrinks
+                    pred_pov = tuple(n for n in topo.pov_at(level, pred.index)
+                                     if n not in failed)
+                    steps.append(RepairStep(
+                        op="notify", comm=topo.pov_name(level, pred.index),
+                        participants=(pred.master,), cost_units=0.0,
+                    ))
+                    steps.append(RepairStep(
+                        op="shrink", comm=topo.pov_name(level, pred.index),
+                        participants=pred_pov,
+                        cost_units=self.cost.s_of_x(k_here + 1),
+                    ))
+                    # 3. own POV shrink (contains the failed master directly)
+                    own_pov = tuple(n for n in topo.pov_at(level, idx)
+                                    if n not in failed)
+                    steps.append(RepairStep(
+                        op="shrink", comm=topo.pov_name(level, idx),
+                        participants=own_pov,
+                        cost_units=self.cost.s_of_x(k_here + 1),
+                    ))
+                # 4. parent comm shrink — the scope boundary: only the group
+                #    that contains the fault, not every master in the cluster
+                parent = topo.parent_of(level, idx)
+                parent_comm = topo.comm_name(level + 1, parent.index)
                 steps.append(RepairStep(
-                    op="promote", comm=f"local_{li}",
-                    participants=(new_master,), cost_units=0.0,
+                    op="shrink", comm=parent_comm,
+                    participants=tuple(m for m in parent.members
+                                       if m not in failed),
+                    cost_units=self.cost.s_of_x(len(parent.members)),
                 ))
-                steps.append(RepairStep(
-                    op="include", comm="global",
-                    participants=(new_master, succ.master), cost_units=0.0,
-                ))
+                # 5. promote + include the new master (via succ POV link).
+                #    At level >= 1 the master promoted one level down has
+                #    just joined this group, so it competes for mastership.
+                survivors_here = tuple(n for n in group_members
+                                       if n not in failed)
+                if promoted is not None:
+                    survivors_here = tuple(sorted({*survivors_here, promoted}))
+                if survivors_here:
+                    new_master = min(survivors_here)
+                    promoted = new_master
+                    steps.append(RepairStep(
+                        op="promote", comm=topo.comm_name(level, idx),
+                        participants=(new_master,), cost_units=0.0,
+                    ))
+                    include = ((new_master, succ.master) if succ is not None
+                               else (new_master,))
+                    steps.append(RepairStep(
+                        op="include", comm=parent_comm,
+                        participants=include, cost_units=0.0,
+                    ))
+                if parent.master != dead_master:
+                    break
+                # the dead node also mastered the parent group — the repair
+                # continues one level up (and only there)
+                level, idx = level + 1, parent.index
+                group_members = parent.members
         return steps
 
     # ---- application ---------------------------------------------------------

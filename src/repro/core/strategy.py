@@ -10,8 +10,17 @@ New modes (checkpoint-restart-all, migrate, ...) are one
 ``@register_strategy("name")`` class, not executor surgery.
 
 Strategies mutate the cluster (topology, batch plan, spare pool, pending
-splices) but never commit bookkeeping: ``VirtualCluster.repair`` owns
-confirm/charge/record, so every strategy gets identical accounting.
+splices) but never commit bookkeeping: ``VirtualCluster.repair`` /
+``VirtualCluster.repair_scoped`` own confirm/charge/record, so every
+strategy gets identical accounting.
+
+Scoped invocation: the fault pipeline partitions each drain's verdict into
+disjoint :class:`~repro.core.types.RepairScope` subtrees and invokes the
+registered strategy once per scope (``repair_scoped``). A strategy
+therefore only ever sees verdict nodes whose repairs share participants —
+faults in unrelated subtrees arrive as separate calls whose repairs are
+charged as concurrent (max cost, not sum). Strategies need no scope
+awareness: the scope is stamped onto the returned report by the cluster.
 
 Exhaustion semantics (satellite fix): the non-blocking strategy lands the
 shrink FIRST, then checks the pool — so a strict-mode
@@ -36,7 +45,14 @@ tests/test_substitute.py, and tests/test_serve.py):
     the provisioner backlog), or scheduled as a ``PendingSubstitution``;
     downstream consumers (batch plan, serve queues) re-own the slot's
     work from the report, which is what makes the serve layer's
-    at-least-once re-enqueue possible.
+    at-least-once re-enqueue possible;
+  * **repairs stay inside their scope** — the engines fold failures
+    legion-by-legion and spares splice into the failed node's home
+    legion, so two disjoint scopes' repairs commute — the property that
+    makes per-scope application order irrelevant and the concurrency
+    claim sound (asserted structurally by benchmarks/hierarchy_scaling.py).
+    The one deliberate exception is shrink-mode's beyond-paper elastic
+    regrow, which may expand whichever live legion is smallest.
 """
 from __future__ import annotations
 

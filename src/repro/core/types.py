@@ -52,6 +52,40 @@ PIPELINE_STAGES = ("detect", "notice", "agree", "plan", "apply")
 
 
 @dataclass(frozen=True)
+class RepairScope:
+    """The minimal subtree of the N-level topology whose members must
+    participate in one repair (Rocco & Palermo: confine reparation to the
+    communicators that actually contain the fault).
+
+    ``groups`` lists the ``(level, group index)`` comms the repair touches;
+    ``participants`` is the union of those comms' surviving members — the
+    only nodes that enter the repair path. Nodes outside ``participants``
+    (healthy subtrees) keep progressing while this scope repairs. Scopes in
+    one pipeline drain have pairwise-disjoint participants by construction
+    (``LegionTopology.partition_scopes`` merges overlapping ones), which is
+    what makes their repairs concurrent.
+    """
+
+    verdict: tuple[int, ...]             # failed nodes this scope covers
+    level: int                           # highest level the repair reaches
+    groups: tuple[tuple[int, int], ...]  # (level, group index) comms touched
+    participants: tuple[int, ...]        # surviving nodes that take part
+
+    @property
+    def n_participants(self) -> int:
+        return len(self.participants)
+
+    @property
+    def legions(self) -> tuple[int, ...]:
+        """Level-0 legion indices inside the scope."""
+        return tuple(gi for lvl, gi in self.groups if lvl == 0)
+
+    def summary(self) -> str:
+        return (f"scope(level={self.level}, legions={list(self.legions)}, "
+                f"participants={self.n_participants})")
+
+
+@dataclass(frozen=True)
 class FaultEvent:
     """One fault signal flowing through the FaultPipeline.
 
@@ -83,6 +117,10 @@ class RecoveryAction:
     report: "RepairReport | None" = None
     terminal: bool = True
     stage_seconds: dict[str, float] = field(default_factory=dict)
+    # the subtree this action repaired; one drain emits one terminal action
+    # per disjoint scope, so faults in unrelated subtrees land as separate,
+    # concurrently-applied actions
+    scope: RepairScope | None = None
 
 
 @dataclass(frozen=True)
@@ -118,6 +156,9 @@ class RepairReport:
     mode: str = "shrink"                 # recovery mode that produced this plan
     substitutions: tuple[tuple[int, int], ...] = ()   # (failed, spare) splices
     unfilled: tuple[int, ...] = ()       # failed slots shrunk for lack of spares
+    scope: RepairScope | None = None     # subtree the repair was confined to
+    repair_participants: int = 0         # survivors that entered the repair
+                                         # path (0 = unscoped/legacy repair)
 
     @property
     def substitution_map(self) -> dict[int, int]:
@@ -127,11 +168,13 @@ class RepairReport:
         kind = "hierarchical" if self.hierarchical else "flat"
         role = "master" if self.master_failed else "worker"
         sub = f" subs={list(self.substitutions)}" if self.substitutions else ""
+        scoped = (f" participants={self.repair_participants}"
+                  if self.scope is not None else "")
         return (f"[repair/{kind}/{self.mode}] failed={list(self.trigger)} "
                 f"role={role} stages={len(self.steps)} "
                 f"model_cost={self.model_cost:.4f}s "
                 f"wall={self.wall_seconds * 1e3:.2f}ms "
-                f"survivors={self.survivors}{sub}")
+                f"survivors={self.survivors}{sub}{scoped}")
 
 
 @dataclass

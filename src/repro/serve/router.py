@@ -1,11 +1,15 @@
-"""RequestRouter — shards the request stream across legions.
+"""RequestRouter — shards the request stream across legions via the
+top-level masters.
 
 Routing reads the topology the same way everything else in the runtime
-does: through an epoch-stamped :class:`TopologyView` snapshot, keyed by the
-legion masters (the global_comm membership — one router entry per master,
-exactly the paper's hierarchy). Requests go to the least-loaded live
-legion; after a repair changes the ring, :meth:`reconcile` re-homes the
-queues of legions that left it, so no request is ever stranded on a
+does: through an epoch-stamped :class:`TopologyView` snapshot. Selection is
+hierarchical, mirroring how traffic actually flows through the N-level
+tree: a request first picks the least-loaded *top-level subtree* (a child
+group of the root comm — the comms the top-level masters front), then the
+least-loaded live legion inside it. For depth <= 2 every legion hangs off
+the root directly, so this degenerates to the classic least-loaded-legion
+policy unchanged. After a repair changes a ring, :meth:`reconcile` re-homes
+the queues of legions that left it, so no request is ever stranded on a
 structure that no longer exists.
 """
 from __future__ import annotations
@@ -14,11 +18,15 @@ from repro.serve.queue import LegionQueue, Request
 
 
 class RequestRouter:
-    """Least-loaded sharding of requests over the live legions."""
+    """Least-loaded sharding of requests over top-level subtrees, then the
+    live legions within."""
 
     def __init__(self):
         self.queues: dict[int, LegionQueue] = {}
         self.rerouted: int = 0          # requests re-homed by reconcile()
+        # legion index -> top-level subtree index (root comm child), from
+        # the last reconciled snapshot
+        self._subtree: dict[int, int] = {}
 
     # -- topology tracking ---------------------------------------------------
 
@@ -30,6 +38,7 @@ class RequestRouter:
         left the ring are drained and their requests resubmitted; returns
         the re-homed requests (metrics count them)."""
         live = set(self._live_legions(view))
+        self._subtree = {idx: view.subtree_of(idx) for idx in live}
         orphans: list[Request] = []
         for idx in [i for i in self.queues if i not in live]:
             orphans.extend(self.queues.pop(idx).drain())
@@ -46,7 +55,17 @@ class RequestRouter:
     def _route(self, req: Request, *, front: bool = False) -> None:
         if not self.queues:
             raise RuntimeError("no live legions to route to")
-        target = min(self.queues.values(), key=lambda q: (len(q), q.legion))
+        # stage 1: least-loaded top-level subtree (ties break on index)
+        load: dict[int, int] = {}
+        for idx, q in self.queues.items():
+            sub = self._subtree.get(idx, idx)
+            load[sub] = load.get(sub, 0) + len(q)
+        best_sub = min(load, key=lambda s: (load[s], s))
+        # stage 2: least-loaded legion inside the chosen subtree
+        target = min(
+            (q for idx, q in self.queues.items()
+             if self._subtree.get(idx, idx) == best_sub),
+            key=lambda q: (len(q), q.legion))
         (target.push_front if front else target.push)(req)
 
     def submit(self, requests: list[Request], view) -> None:

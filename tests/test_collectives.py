@@ -1,5 +1,6 @@
 """Hierarchical collective schedules (paper §V / Fig. 4) and timing model."""
 import numpy as np
+import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.collectives import (
@@ -88,3 +89,61 @@ def test_agreement_overhead_small():
 def test_local_op_free():
     res = HierarchicalCollectives(topo16()).local_op(3)
     assert res.sim_seconds == 0.0
+
+
+# -- N-level (depth >= 3) schedules -----------------------------------------
+
+def topo64_d3():
+    return LegionTopology.build(list(range(64)), 4, depth=3)
+
+
+def test_depth3_bcast_delivers_and_walks_levels():
+    coll = HierarchicalCollectives(topo64_d3())
+    payload = np.arange(8, dtype=np.float32)
+    res = coll.bcast(5, payload)
+    for n in range(64):
+        np.testing.assert_array_equal(res.data[n], payload)
+    comms = [s[0] for s in res.stages]
+    # up-chain: root's legion, its super-legion, the root comm — then the
+    # down-sweep over the other super-legions and legions
+    assert comms[:3] == ["local_1", "l1_0", "global"]
+    assert {c for c in comms if c.startswith("l1_")} == \
+        {"l1_0", "l1_1", "l1_2", "l1_3"}
+    assert sum(c.startswith("local_") for c in comms) == 16
+
+
+def test_depth3_reduce_collects_full_sum():
+    topo = topo64_d3()
+    coll = HierarchicalCollectives(topo)
+    contributions = {n: np.full(2, float(n)) for n in topo.nodes}
+    res = coll.reduce(9, contributions)
+    np.testing.assert_array_equal(
+        res.data[9], np.full(2, float(sum(range(64)))))
+
+
+def test_reduce_without_surviving_contributors_is_a_clear_error():
+    """The failure mode is explicit (ValueError), never a bare
+    StopIteration leaking from the level walk."""
+    topo = topo16()
+    coll = HierarchicalCollectives(topo)
+    with pytest.raises(ValueError, match="no surviving contributor"):
+        coll.reduce(0, {99: np.ones(2)})      # 99 is not in the topology
+
+
+def test_level_slowdown_scales_upper_hops():
+    """Per-level cost accounting: a hop at level l >= 2 costs
+    level_slowdown**(l-1) x the first cross hop; the default (1.0) keeps
+    every cross hop identical."""
+    topo = topo64_d3()
+    payload = np.zeros(1024, np.float64)
+    scaled = {c: (n, t) for c, n, t in
+              HierarchicalCollectives(
+                  topo, LinkModel(level_slowdown=4.0)).bcast(0, payload).stages}
+    flat = {c: (n, t) for c, n, t in
+            HierarchicalCollectives(topo).bcast(0, payload).stages}
+    # l1_0 (level 1) and global (level 2) have 4 participants each here
+    assert scaled["l1_0"][0] == scaled["global"][0] == 4
+    assert scaled["global"][1] == pytest.approx(4.0 * scaled["l1_0"][1])
+    assert flat["global"][1] == pytest.approx(flat["l1_0"][1])
+    # level-1 hops are not scaled — only levels above the first cross hop
+    assert scaled["l1_0"][1] == pytest.approx(flat["l1_0"][1])

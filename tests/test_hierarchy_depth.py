@@ -1,0 +1,270 @@
+"""Depth >= 3 invariants of the recursive N-level topology (paper §V
+claims (a)/(b)/(c) generalized per level) plus the scoped-repair partition.
+
+Two flavors per invariant: a hypothesis property test (CI runs these; the
+conftest stub skips them when hypothesis is absent) and a deterministic
+hand-driven campaign that exercises the same invariant locally.
+"""
+import random
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.hierarchy import (
+    LegionTopology,
+    StaleLegionError,
+    make_topology,
+)
+from repro.core.policy import LegioPolicy, optimal_kd
+
+nodes_st = st.integers(min_value=2, max_value=200)
+k_st = st.integers(min_value=2, max_value=8)
+depth_st = st.integers(min_value=1, max_value=4)
+
+
+def check_structure(topo: LegionTopology) -> None:
+    """Every invariant the recursive tree must keep at every level."""
+    # member index coherent with the legion lists
+    for lg in topo.legions:
+        for m in lg.members:
+            assert topo.legion_of(m) is lg
+    assert sorted(topo._by_member) == topo.nodes
+    # (a) communicator count stays linear in n
+    assert topo.n_communicators() <= 3 * max(topo.size, 1) + 2
+    n_groups = sum(len(topo.groups(level))
+                   for level in range(max(topo.depth - 1, 1)))
+    assert topo.n_communicators() == 2 * n_groups + 2
+    # each level partitions the one below; the top level is a single root
+    lv = topo.levels()
+    assert len(lv) == topo.depth - 1
+    child_indices = [lg.index for lg in topo.legions if lg.members]
+    for groups in lv:
+        seen = sorted(ci for g in groups for ci in g.children)
+        assert seen == sorted(child_indices)        # disjoint + complete
+        for g in groups:
+            assert g.master == min(g.members)       # lowest-rank master rule
+        child_indices = [g.index for g in groups]
+    if lv:
+        assert len(lv[-1]) == 1                     # exactly one root comm
+    # every level's POV ring closes: following successors visits every
+    # group exactly once and returns to the start
+    for level in range(max(topo.depth - 1, 1)):
+        ring = topo.groups(level)
+        if not ring:
+            continue
+        start = ring[0].index
+        seen, idx = [], start
+        for _ in range(len(ring)):
+            seen.append(idx)
+            idx = topo.successor_at(level, idx).index
+        assert idx == start                          # the ring closes
+        assert sorted(seen) == sorted(g.index for g in ring)
+        for g in ring:
+            assert topo.predecessor_at(
+                level, topo.successor_at(level, g.index).index).index == g.index
+            pov = topo.pov_at(level, g.index)
+            assert set(g.members) <= set(pov)
+            assert len(pov) <= len(g.members) + 1
+
+
+def check_paths(topo: LegionTopology, pairs) -> None:
+    """(b)/(c): exactly one master path, hop-legal at every step."""
+    for src, dst in pairs:
+        path = topo.path(src, dst)
+        assert path[0] == src and path[-1] == dst
+        assert len(path) <= 2 * topo.depth
+        assert len(set(path)) == len(path)           # no revisits
+        chains = {n: topo.master_chain(n) for n in (src, dst)}
+        for hop in path[1:-1]:
+            # every intermediate hop is on one endpoint's master chain
+            assert hop in chains[src] or hop in chains[dst]
+        for a, b in zip(path, path[1:]):
+            assert _share_comm(topo, a, b), (a, b, path)
+
+
+def _share_comm(topo: LegionTopology, a: int, b: int) -> bool:
+    if topo.legion_of(a).index == topo.legion_of(b).index:
+        return True
+    for level in range(1, topo.depth):
+        for g in topo.groups(level):
+            if a in g.members and b in g.members:
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# property tests (CI)
+# ---------------------------------------------------------------------------
+
+@given(n=nodes_st, k=k_st, depth=depth_st)
+def test_build_invariants_any_depth(n, k, depth):
+    topo = LegionTopology.build(list(range(n)), k, depth=depth)
+    if depth > 1:
+        assert topo.depth == depth
+    check_structure(topo)
+
+
+@given(n=st.integers(8, 120), k=st.integers(2, 5), data=st.data())
+def test_unique_master_path_depth3(n, k, data):
+    topo = LegionTopology.build(list(range(n)), k, depth=3)
+    src = data.draw(st.integers(0, n - 1))
+    dst = data.draw(st.integers(0, n - 1))
+    check_paths(topo, [(src, dst)])
+
+
+@given(n=st.integers(12, 100), k=st.integers(2, 5),
+       depth=st.integers(2, 4), data=st.data())
+def test_rings_close_after_arbitrary_mutations(n, k, depth, data):
+    """Every level's POV ring survives arbitrary remove/compact/substitute
+    sequences (the satellite invariant)."""
+    topo = LegionTopology.build(list(range(n)), k, depth=depth)
+    spare = n
+    for _ in range(data.draw(st.integers(1, 12))):
+        nodes = topo.nodes
+        if len(nodes) <= 2:
+            break
+        action = data.draw(st.sampled_from(["remove", "compact", "substitute"]))
+        victim = data.draw(st.sampled_from(nodes))
+        if action == "remove":
+            topo.remove(victim)
+        elif action == "substitute":
+            topo.substitute(victim, spare)
+            spare += 1
+        topo.compact()
+        check_structure(topo)
+
+
+@given(n=st.integers(20, 120), data=st.data())
+def test_scope_partition_covers_verdict_disjointly(n, data):
+    topo = LegionTopology.build(list(range(n)), 4, depth=3)
+    n_fail = data.draw(st.integers(1, 6))
+    verdict = set(data.draw(st.permutations(list(range(n))))[:n_fail])
+    scopes = topo.partition_scopes(verdict)
+    covered = [v for s in scopes for v in s.verdict]
+    assert sorted(covered) == sorted(verdict)        # partition, no overlap
+    for i, a in enumerate(scopes):
+        assert not set(a.participants) & verdict
+        for b in scopes[i + 1:]:
+            assert not set(a.participants) & set(b.participants)
+
+
+# ---------------------------------------------------------------------------
+# deterministic campaigns (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+def test_depth3_structure_and_paths_campaign():
+    rng = random.Random(0)
+    for n, k, depth in [(64, 4, 3), (100, 3, 4), (27, 3, 3), (200, 5, 3)]:
+        topo = LegionTopology.build(list(range(n)), k, depth=depth)
+        check_structure(topo)
+        check_paths(topo, [(rng.randrange(n), rng.randrange(n))
+                           for _ in range(20)])
+
+
+def test_depth3_rings_survive_random_mutations():
+    rng = random.Random(1)
+    for trial in range(30):
+        n, k = rng.choice([(48, 4), (60, 3), (90, 5)])
+        depth = rng.choice([2, 3, 4])
+        topo = LegionTopology.build(list(range(n)), k, depth=depth)
+        spare = n
+        for _ in range(rng.randrange(1, 15)):
+            nodes = topo.nodes
+            if len(nodes) <= 2:
+                break
+            action = rng.choice(["remove", "remove", "substitute", "compact"])
+            if action == "remove":
+                topo.remove(rng.choice(nodes))
+            elif action == "substitute":
+                topo.substitute(rng.choice(nodes), spare)
+                spare += 1
+            topo.compact()
+            check_structure(topo)
+        live = topo.nodes
+        check_paths(topo, [(rng.choice(live), rng.choice(live))
+                           for _ in range(5)])
+
+
+def test_communicator_count_linear_at_depth3():
+    counts = {n: LegionTopology.build(list(range(n)), 4, depth=3)
+              .n_communicators() for n in (64, 128, 256, 512)}
+    # doubling n at most doubles the communicator count (+ constant)
+    for n in (64, 128, 256):
+        assert counts[2 * n] <= 2 * counts[n] + 2
+
+
+def test_stale_index_raises_topology_error_not_stopiteration():
+    topo = LegionTopology.build(list(range(12)), 2, depth=3)
+    topo.remove(4)
+    topo.remove(5)
+    topo.compact()                                   # legion 2 left the ring
+    for fn in (topo.successor, topo.predecessor, topo.pov):
+        with pytest.raises(StaleLegionError):
+            fn(2)
+        with pytest.raises(StaleLegionError):
+            fn(99)
+    with pytest.raises(StaleLegionError):
+        topo.group_at(1, 99)
+    with pytest.raises(StaleLegionError):
+        topo.pov_at(1, 99)
+    # StaleLegionError is a KeyError, so pre-hardening callers that caught
+    # KeyError keep working
+    assert issubclass(StaleLegionError, KeyError)
+
+
+def test_member_index_matches_linear_scan():
+    topo = LegionTopology.build(list(range(40)), 4, depth=3)
+    rng = random.Random(2)
+    spare = 40
+    for _ in range(25):
+        nodes = topo.nodes
+        if len(nodes) <= 2:
+            break
+        action = rng.choice(["remove", "substitute", "expand"])
+        if action == "remove":
+            topo.remove(rng.choice(nodes))
+            topo.compact()
+        elif action == "substitute":
+            topo.substitute(rng.choice(nodes), spare)
+            spare += 1
+        else:
+            legion = rng.choice([lg.index for lg in topo.legions])
+            topo.expand(legion, spare)
+            spare += 1
+        for node in topo.nodes:
+            by_index = topo.legion_of(node)
+            by_scan = next(lg for lg in topo.legions if node in lg.members)
+            assert by_index is by_scan
+    with pytest.raises(KeyError):
+        topo.legion_of(-1)
+
+
+def test_flat_and_depth2_unchanged_by_default():
+    """Back-compat: the default policy still yields the paper's pair."""
+    pol = LegioPolicy()
+    assert make_topology(list(range(8)), pol).depth == 1
+    assert make_topology(list(range(16)), pol).depth == 2
+    t = make_topology(list(range(16)), LegioPolicy(hierarchy_depth=3,
+                                                   legion_size=4))
+    assert t.depth == 3 and len(t.levels()) == 2
+    check_structure(t)
+
+
+def test_optimal_kd_balances_levels():
+    assert optimal_kd(64, 2) == 5                    # Eq. 3 verbatim at d=2
+    assert optimal_kd(64, 3) == 4                    # 64^(1/3)
+    assert optimal_kd(10_000, 3) == 22
+    # deeper trees want smaller k
+    assert optimal_kd(10_000, 4) < optimal_kd(10_000, 3)
+
+
+def test_choose_depth_recursive_threshold():
+    pol = LegioPolicy()
+    assert pol.choose_depth(12) == 1                 # paper: flat below s=12
+    assert pol.choose_depth(100) >= 2
+    k, d = pol.choose_kd(10_000)
+    assert d >= 3                                    # master comm outgrew it
+    # explicit knob pins the depth
+    assert LegioPolicy(hierarchy_depth=5).choose_depth(10_000) == 5
+    with pytest.raises(ValueError):
+        LegioPolicy(hierarchy_depth=-1)
