@@ -3,27 +3,31 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint docs bench-quick bench bench-json install-dev
+.PHONY: test lint docs bench-quick bench bench-json mpi-demo install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 # ruff (config in pyproject.toml); CI's lint job runs exactly this
 lint:
-	$(PYTHON) -m ruff check src/repro/core src/repro/serve tests benchmarks examples
+	$(PYTHON) -m ruff check src/repro/core src/repro/mpi src/repro/serve tests benchmarks examples
 
 # docs site link-check (README + docs/); CI's docs job runs exactly this
 docs:
 	$(PYTHON) tools/check_links.py
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
-# + N-level scoped-repair scaling
+# + N-level scoped-repair scaling + MPI-facade transparency overhead
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling
+	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling interposition
 
-# same smoke, plus machine-readable results in BENCH_PR4.json (CI artifact)
+# same smoke, plus machine-readable results in BENCH_PR5.json (CI artifact)
 bench-json:
-	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling
+	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling interposition
+
+# the transparency claim, live: an unmodified MPI-shaped loop surviving faults
+mpi-demo:
+	$(PYTHON) examples/transparent_mpi.py
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -4,10 +4,10 @@
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
   PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
                                                      # + machine-readable
-                                                     #   BENCH_PR4.json
+                                                     #   BENCH_PR5.json
 
 ``--json`` records per-suite status/wall-seconds (and whatever dict a
-suite's ``main()`` returns) to ``BENCH_PR4.json`` — the CI artifact. The
+suite's ``main()`` returns) to ``BENCH_PR5.json`` — the CI artifact. The
 asserts inside the suites stay structural (the bench-smoke convention);
 the JSON is for dashboards, not pass/fail.
 """
@@ -31,10 +31,12 @@ SUITES = [
     ("hierarchy_scaling", "benchmarks.hierarchy_scaling", "§V scalability"),
     ("repair_recompile", "benchmarks.repair_recompile", "beyond-paper"),
     ("serve_latency", "benchmarks.serve_latency", "beyond-paper"),
+    ("interposition_overhead", "benchmarks.interposition_overhead",
+     "§VI transparency overhead"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
 ]
 
-JSON_PATH = "BENCH_PR4.json"
+JSON_PATH = "BENCH_PR5.json"
 
 
 def main() -> int:

@@ -14,6 +14,10 @@ Layering (paper section -> module):
   §IV executor       transparent orchestration draining the pipeline
   §VII cr            per-legion C/R, restart-only-failed
   —   trainer        SPMD resilient training integration
+
+Applications do not consume these pieces directly: the MPI-shaped surface
+they program against is :mod:`repro.mpi` (Session/Comm — the paper's PMPI
+interposition seam); everything here is the machinery behind it.
 """
 from repro.core.agreement import agree_fault, agreement_rounds, liveness_psum
 from repro.core.batch import (
@@ -30,9 +34,6 @@ from repro.core.collectives import (
     LinkModel,
     agreement_time,
     flat_collective_time,
-    hierarchical_psum,
-    hierarchical_psum_scatter,
-    make_hierarchical_allreduce,
 )
 from repro.core.cr import LegionCheckpointer
 from repro.core.detector import (
@@ -117,8 +118,8 @@ __all__ = [
     "TopologyTornError", "TopologyView", "TrainerReport", "UnfilledSlot",
     "VirtualCluster", "agree_fault", "agreement_rounds", "agreement_time",
     "available_strategies", "failures_by_legion", "flat_collective_time",
-    "gradient_scale", "hierarchical_psum", "hierarchical_psum_scatter",
-    "initial_assignment", "liveness_psum", "make_hierarchical_allreduce",
+    "gradient_scale",
+    "initial_assignment", "liveness_psum",
     "make_strategy", "make_topology", "make_train_step", "notice_fault",
     "optimal_k_linear", "optimal_k_quadratic", "optimal_kd",
     "eq3_s_of_k", "eq4_s_of_k",

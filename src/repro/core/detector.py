@@ -38,6 +38,13 @@ class HeartbeatDetector:
     def beat(self, node: int, now: float) -> None:
         if self.states.get(node) == NodeState.FAILED:
             return  # a failed node never comes back (permanent fault model)
+        if node not in self.states:
+            # a beat from a node nobody registered (e.g. a spare announcing
+            # itself before its splice): auto-register instead of writing a
+            # last_seen entry with no state — that orphan made the next
+            # sweep() raise KeyError
+            self.register(node, now)
+            return
         self.last_seen[node] = now
         if self.states.get(node) == NodeState.SUSPECT:
             self.states[node] = NodeState.HEALTHY  # false suspicion cleared

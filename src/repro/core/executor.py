@@ -1,32 +1,28 @@
 """LegioExecutor — the transparent fault-resiliency loop (paper §IV).
 
-PMPI interposition has no JAX analogue at the call level; the equivalent
-*seam* is the step boundary: applications hand the executor a per-shard work
-function and the executor owns everything Legio owns in MPI — substitute
-structures (the legion topology standing in for the application's
-communicator), fault detection, agreement, repair, and shard reassignment.
-Application code never sees a fault.
+Communication goes exclusively through the ``repro.mpi`` facade: the
+executor holds a :class:`repro.mpi.Session` over its cluster and issues the
+step-final collective as an ordinary MPI-shaped call on the world
+:class:`repro.mpi.Comm`. The PMPI-style interposition inside that call owns
+everything Legio owns in MPI — trapping the simulated PROC_FAILED, draining
+the FaultPipeline (detect → notice → agree → plan → apply), applying the
+registered RecoveryStrategy, and retrying on the repaired communicator —
+so ``run_step`` is orchestration only:
 
-Recovery is an event-driven pipeline (core/pipeline.py), not an in-line
-procedure: every fault signal — collective PROC_FAILED observations,
-heartbeat timeouts, straggler soft-fails — flows through explicit
-detect → notice → agree → plan → apply stages, and the repair itself is a
-registered RecoveryStrategy (core/strategy.py) selected by the policy.
-``run_step`` is orchestration only:
-
-  1. step boundary: the SpareProvisioner delivers re-spawned spares (elastic
-     refill, the MPI_Comm_spawn analogue) and warmed-up non-blocking
-     substitutes rejoin;
+  1. step boundary (``Session.boundary``): the SpareProvisioner delivers
+     re-spawned spares (elastic refill, the MPI_Comm_spawn analogue),
+     warmed-up non-blocking substitutes rejoin, and ground-truth faults
+     land;
   2. per-node shard work (EP: no interaction until the final collective);
-  3. the pipeline drains the collective + heartbeat channels — the agreed
-     verdict is repaired by the active strategy BEFORE the op re-runs
-     (paper §IV: check after the op; if confirmed repair, repeat);
-  4. the step-final collective runs against a pinned TopologyView snapshot —
-     a mid-pipeline repair can never tear the structure the collective is
-     reading (TopologyTornError if anything tries);
-  5. the pipeline drains the straggler channel (soft-fails routed through
-     the same strategies — the paper's discard semantics applied to
-     performance faults), and the StepReport surfaces every action.
+  3. the step-final collective runs on the comm — faults are repaired
+     inside the call, before the schedule re-runs against a pinned
+     TopologyView (paper §IV: check after the op; if confirmed repair,
+     repeat). A failed op *root* surfaces per policy: STOP raises
+     RootFailedError from the gate, IGNORE skips the op for the step
+     (the facade's PeerFailedError, caught here);
+  4. the straggler channel drains through the same pipeline
+     (``Session.poll`` — soft-fails routed through the same strategies),
+     and the StepReport surfaces every action the session recorded.
 """
 from __future__ import annotations
 
@@ -359,7 +355,16 @@ class LegioExecutor:
         final_collective: str = "allreduce",   # allreduce | reduce | bcast | none
         root: int = 0,
     ):
+        # the facade is the only communication surface; lazy import keeps
+        # repro.core importable without repro.mpi in the module graph
+        from repro.mpi import Session
+
         self.cluster = cluster
+        self.session = Session.adopt(cluster)
+        self.comm = self.session.world
+        # keyed: the world comm is shared per cluster — a rebuilt executor
+        # replaces its hook instead of stacking another
+        self.comm.attach(self._validate_pin, key="executor-validate-plan")
         self.work_fn = work_fn
         self.reduce_op = reduce_op or np.add
         self.final_collective = final_collective
@@ -367,18 +372,23 @@ class LegioExecutor:
         self.step_count = 0
         self._skip_op = False
 
-    # -- pipeline hooks -----------------------------------------------------------
+    # -- facade hooks (PMPI-style interposers) -----------------------------------
+
+    def _validate_pin(self, op: str, view: TopologyView) -> None:
+        """Interposer run on every comm call against the pinned view: the
+        shard plan must agree with the structure the schedule reads."""
+        validate_plan(self.cluster.plan, view)
 
     def _root_gate(self, verdict: set[int]) -> None:
         """Runs between agree and apply: the paper's root-failure knob.
-        STOP raises before any repair mutates state; IGNORE marks the op
-        skipped (buffers unchanged) and lets the repair proceed."""
+        STOP raises before any repair mutates state; IGNORE lets the
+        repair proceed — the facade then surfaces the dead root as
+        PeerFailedError, which run_step turns into a skipped op."""
         if self.root in verdict and self.final_collective in ("bcast", "reduce"):
             if self.cluster.policy.root_failure_policy == "stop":
                 raise RootFailedError(
                     f"root node {self.root} failed at step "
                     f"{self.cluster._step}")
-            self._skip_op = True
 
     # -- step phases --------------------------------------------------------------
 
@@ -400,49 +410,37 @@ class LegioExecutor:
             cl.straggler.observe(node, time.perf_counter() - t0)
         return results, computed_shards
 
-    def _fault_phase(self, step: int,
-                     results: dict[int, Any]) -> list[RecoveryAction]:
-        """Feed the collective channel and drain the crash channels.
-        Paper §IV: presence of fault is checked AFTER the op; if confirmed
-        repair, then repeat the operation — so the drain (and its repairs)
-        lands before the collective re-runs on the repaired topology."""
-        cl = self.cluster
-        self._skip_op = False
-        if self.final_collective != "none" and results:
-            op_kind = "bcast" if self.final_collective == "bcast" else "allreduce"
-            failed_in_topo = {n for n in cl.topo.nodes if n in cl.failed}
-            cl.pipeline.observe_collective(op_kind, cl.topo.nodes,
-                                           failed_in_topo, root=self.root)
-        return cl.pipeline.drain(
-            step, sources=(FaultSource.COLLECTIVE, FaultSource.HEARTBEAT),
-            gate=self._root_gate)
-
     def _collective_phase(self, results: dict[int, Any]
                           ) -> tuple[Any, float]:
-        """Run the step-final collective against a pinned TopologyView —
-        the repaired structure is snapshotted and cannot be torn by any
-        mutation while the op is in flight."""
-        cl = self.cluster
-        with cl.topo.pinned() as tv:
-            validate_plan(cl.plan, tv)
-            coll = cl.collectives(tv)
-            contributions = {n: np.asarray(v) for n, v in results.items()
-                             if n in tv.node_set}
-            nodes = tv.nodes
+        """Issue the step-final collective as one MPI-shaped call on the
+        facade comm. The interposition inside the call traps PROC_FAILED,
+        drains the crash channels (gated by the root-failure policy),
+        repairs, and runs the schedule against a pinned TopologyView —
+        the executor neither observes nor repairs anything itself."""
+        from repro.mpi import PeerFailedError
+
+        contributions = {n: np.asarray(v) for n, v in results.items()}
+        try:
             if self.final_collective == "allreduce":
-                res = coll.allreduce(contributions, self.reduce_op)
-                reduced = res.data.get(nodes[0]) if nodes else None
+                res = self.comm.allreduce(contributions, self.reduce_op,
+                                          gate=self._root_gate)
+                members = self.comm.members
+                reduced = res.data.get(members[0]) if members else None
             elif self.final_collective == "reduce":
-                rt = self.root if self.root in tv.node_set else nodes[0]
-                res = coll.reduce(rt, contributions, self.reduce_op)
-                reduced = res.data[rt]
+                res = self.comm.reduce(contributions, self.root,
+                                       self.reduce_op, gate=self._root_gate)
+                reduced = next(iter(res.data.values()))
             elif self.final_collective == "bcast":
-                rt = self.root if self.root in tv.node_set else nodes[0]
-                res = coll.bcast(rt, contributions.get(rt, np.zeros(1)))
-                reduced = res.data[rt]
+                res = self.comm.bcast(contributions, self.root,
+                                      gate=self._root_gate)
+                reduced = next(iter(res.data.values()))
             else:
                 return None, 0.0
-        cl.clock.charge(res.sim_seconds)
+        except PeerFailedError:
+            # the op's root was in this call's verdict and the policy is
+            # IGNORE: the repair has landed, the op result is discarded
+            self._skip_op = True
+            return None, 0.0
         return reduced, res.sim_seconds
 
     # -- one transparent step -----------------------------------------------------
@@ -451,30 +449,32 @@ class LegioExecutor:
         cl = self.cluster
         step = self.step_count if step is None else step
         t_start = time.perf_counter()
-        # 0. step boundary: the provisioner delivers re-spawned spares (and
-        #    reschedules shrunk slots), warmed-up substitutes rejoin, faults
-        #    due this step land in the ground truth, the sim clock ticks
-        respawned = cl.poll_provisioner(step)
-        expansions = cl.poll_substitutions(step)
-        cl.inject(step)
-        cl.clock.charge(cl.policy.step_sim_seconds)
+        # 0. step boundary (Session.boundary): the provisioner delivers
+        #    re-spawned spares (and reschedules shrunk slots), warmed-up
+        #    substitutes rejoin, faults due this step land in the ground
+        #    truth, the sim clock ticks
+        boundary = self.session.boundary(step)
 
         # 1. per-node shard work (only live nodes actually compute)
         results, computed_shards = self._work_phase(step)
 
-        # 2. drain the crash channels (collective errors + heartbeat
-        #    timeouts) through detect → notice → agree → plan → apply
-        actions = self._fault_phase(step, results)
-
-        # 3. the op re-runs on the repaired topology (unless skipped)
+        # 2. the step-final collective as one facade call — fault trap,
+        #    pipeline drain, repair, and the retried schedule all happen
+        #    behind it (paper §IV). With no collective this step, the crash
+        #    channels still drain so heartbeat timeouts reach agreement.
+        self._skip_op = False
         reduced, sim_t = (None, 0.0)
-        if self.final_collective != "none" and results and not self._skip_op:
+        if self.final_collective != "none" and results:
             reduced, sim_t = self._collective_phase(results)
+        else:
+            self.session.poll(
+                (FaultSource.COLLECTIVE, FaultSource.HEARTBEAT),
+                gate=self._root_gate)
 
-        # 4. straggler soft-fails drain through the same pipeline, after the
-        #    op (a lagging node's contribution still counts this step)
-        actions = actions + cl.pipeline.drain(
-            step, sources=(FaultSource.STRAGGLER,))
+        # 3. straggler soft-fails drain through the same pipeline, after
+        #    the op (a lagging node's contribution still counts this step)
+        self.session.poll((FaultSource.STRAGGLER,))
+        actions = list(self.session.take_actions())
 
         self.step_count = step + 1
         # back-compat: `repair` carries the first CRASH repair only; straggler
@@ -497,8 +497,8 @@ class LegioExecutor:
             # just-spliced spare did not compute yet)
             grad_scale=(cl.total_shards / computed_shards
                         if computed_shards else 0.0),
-            expanded=tuple(s for r in expansions for s in r.substitutions),
-            respawned=tuple(respawned),
+            expanded=boundary.expanded,
+            respawned=boundary.respawned,
         )
 
     def run(self, n_steps: int) -> list[StepReport]:

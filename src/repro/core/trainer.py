@@ -35,7 +35,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.cr import LegionCheckpointer
 from repro.core.executor import VirtualCluster
 from repro.core.mesh_manager import CompileCache, DevicePool, MeshManager
-from repro.core.types import FaultEvent, FaultSource, RepairReport
+from repro.core.types import RepairReport
 from repro.data.pipeline import make_batch
 from repro.models import api
 from repro.optim import (
@@ -105,6 +105,12 @@ class ResilientTrainer:
         if checkpointer is not None and cluster.checkpointer is None:
             # substituted ranks restore from the same per-legion store
             cluster.checkpointer = checkpointer
+        # all fault plumbing rides the MPI facade: the session owns the
+        # step boundary (spare delivery, splice re-expansion, ground-truth
+        # injection) and the INJECTED-channel drain
+        from repro.mpi import Session
+
+        self.session = Session.adopt(cluster)
         self.pool = DevicePool(n_nodes=cluster.n_initial,
                                n_spares=cluster.spare_pool.capacity)
         self.mesh_manager = MeshManager(self.pool)
@@ -143,26 +149,19 @@ class ResilientTrainer:
         t0 = time.perf_counter()
         step = self.step
 
-        # step boundary: the provisioner delivers re-spawned spares and
-        # warmed-up non-blocking substitutes rejoin before new shards are
-        # handed out (re-expansion = mesh change too)
-        cl.poll_provisioner(step)
-        expansions = cl.poll_substitutions(step)
-        # fault injection surfaces BEFORE the step's collective in real runs;
-        # here the observed failures feed the same pipeline the executor
-        # drains — detect → notice → agree → plan → apply — so the trainer
-        # repairs through the registered RecoveryStrategy, not a side door.
-        events = cl.inject(step)
+        # step boundary through the facade: the provisioner delivers
+        # re-spawned spares and warmed-up non-blocking substitutes rejoin
+        # before new shards are handed out (re-expansion = mesh change
+        # too); ground-truth faults land and drain through the pipeline's
+        # INJECTED channel — detect → notice → agree → plan → apply — so
+        # the trainer repairs through the registered RecoveryStrategy, not
+        # a side door. (charge=False: the trainer's clock is wall time.)
+        boundary = self.session.boundary(step, observe_injected=True,
+                                         charge=False)
         repair = None
-        recompiled = bool(expansions)
-        observed = {e.node for e in events if e.node in cl.topo.nodes}
-        if observed:
-            cl.pipeline.observe(FaultEvent(
-                nodes=tuple(sorted(observed)), step=step,
-                source=FaultSource.INJECTED))
-        actions = cl.pipeline.drain(step, sources=(FaultSource.INJECTED,))
-        if actions:
-            repair = actions[0].report
+        recompiled = bool(boundary.expansions)
+        if boundary.actions:
+            repair = boundary.actions[0].report
             recompiled = True  # mesh change forces re-lower unless cached
 
         batch, grad_scale = self._global_batch(step)

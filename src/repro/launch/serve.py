@@ -27,16 +27,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
-from repro.core import FaultInjector, LegioPolicy, VirtualCluster
+from repro.core import FaultInjector, LegioPolicy
 from repro.models import api
+from repro.mpi import Session
 from repro.serve import RECOVERY_PRESETS, Request, ServeEngine, recovery_preset
 
 
 class ResilientServer:
     """Model-backed serving: prefill + greedy decode per micro-batch, fault
-    recovery delegated to :class:`repro.serve.ServeEngine`."""
+    recovery delegated to :class:`repro.serve.ServeEngine` over the
+    ``repro.mpi`` session facade — this driver contains zero fault code."""
 
-    def __init__(self, cfg, cluster: VirtualCluster, *, prompt_len: int = 32,
+    def __init__(self, cfg, cluster: "Session", *, prompt_len: int = 32,
                  decode_tokens: int = 8, batch_per_node: int = 4,
                  requeue: bool = True):
         self.cfg = cfg
@@ -127,10 +129,10 @@ def main(argv: list[str] | None = None) -> int:
     # batch size flows through the ResilientServer constructor (the engine's
     # explicit microbatch override); the policy only carries recovery setup
     policy = LegioPolicy(**recovery_preset(args.recovery))
-    cluster = VirtualCluster(
+    session = Session(
         args.nodes, policy=policy, injector=FaultInjector.at(pairs))
     server = ResilientServer(
-        cfg, cluster, prompt_len=args.prompt_len,
+        cfg, session, prompt_len=args.prompt_len,
         decode_tokens=args.decode_tokens, batch_per_node=args.batch_per_node,
         requeue=not args.no_requeue)
     print(f"[serve] arch={cfg.name} nodes={args.nodes} "

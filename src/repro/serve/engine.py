@@ -17,11 +17,14 @@ the engine owns for requests. Per round:
      id completes at most once from the client's view); the result-gather
      surfaces PROC_FAILED for dead dispatched nodes into the pipeline's
      collective channel;
-  5. drain — the FaultPipeline runs detect → notice → agree → plan → apply;
-     the engine's pipeline listener re-enqueues every verdict node's
-     in-flight requests (front of the least-loaded surviving legion's
-     queue). Healthy legions dispatched in step 2 and keep dispatching next
-     round — repair never barriers serving (non-blocking substitute path).
+  5. drain — the result gather is one interposed call on the MPI facade
+     (``repro.mpi.Comm.gather``): it traps the lost nodes' PROC_FAILED,
+     runs detect → notice → agree → plan → apply, and returns only after
+     the repair landed; the engine's pipeline listener re-enqueues every
+     verdict node's in-flight requests (front of the least-loaded surviving
+     legion's queue). Healthy legions dispatched in step 2 and keep
+     dispatching next round — repair never barriers serving (non-blocking
+     substitute path).
 
 Invariants (asserted by tests/test_serve.py):
 
@@ -43,6 +46,7 @@ from typing import Any, Callable
 
 from repro.core.executor import VirtualCluster
 from repro.core.types import FaultSource, RecoveryAction
+from repro.mpi import Session
 from repro.serve.batcher import MicroBatcher
 from repro.serve.metrics import CompletionRecord, ServeMetrics
 from repro.serve.queue import Request
@@ -102,13 +106,21 @@ class ServeEngine:
 
     def __init__(
         self,
-        cluster: VirtualCluster,
+        cluster: "VirtualCluster | Session",
         work_fn: WorkFn,
         *,
         microbatch: int | None = None,
         requeue: bool = True,
         observe_stragglers: bool = True,
     ):
+        # all fault plumbing goes through the MPI facade; a driver may hand
+        # in its Session directly (launch/serve.py) or a bare cluster
+        if isinstance(cluster, Session):
+            self.session = cluster
+            cluster = cluster.cluster
+        else:
+            self.session = Session.adopt(cluster)
+        self._comm = self.session.world
         self.cluster = cluster
         self.work_fn = work_fn
         self.requeue = requeue
@@ -200,8 +212,7 @@ class ServeEngine:
         t_start = time.perf_counter()
 
         # 1. boundary: elastic refills + warmed-up substitutes rejoin
-        respawned = cl.poll_provisioner(step)
-        expansions = cl.poll_substitutions(step)
+        boundary = self.session.deliver(step)
 
         # 2. dispatch against a pinned snapshot — a repair can neither run
         #    nor tear the structure while batches are being formed
@@ -221,8 +232,7 @@ class ServeEngine:
                     self.metrics.record_dispatch(step, lg.index, len(batch))
 
         # 3. faults land mid-flight; the sim clock ticks
-        cl.inject(step)
-        cl.clock.charge(cl.policy.step_sim_seconds)
+        self.session.inject(step)
 
         # 4. execute — healthy nodes complete, dead ones lose their batch
         completed_before = len(self.completed)
@@ -245,20 +255,14 @@ class ServeEngine:
                     if dropped_view is None:
                         dropped_view = cl.topo.view()
                     self._redeliver(req, dropped_view)
-        lost = {n for n in self._inflight if n in cl.failed
-                and n in cl.topo.nodes}
-        if lost:
-            # the result gather is the serving analogue of the step-final
-            # collective: every surviving dispatched node notices
-            cl.pipeline.observe_collective(
-                "gather", cl.topo.nodes, lost)
-
-        # 5. drain — the listener re-enqueues verdict nodes' batches
+        # 5. the result gather, as one interposed facade call: the lost
+        #    nodes' PROC_FAILED is trapped among the dispatched set, the
+        #    crash channels drain, and the pipeline listener re-enqueues
+        #    verdict nodes' batches before the call returns
         requeues_before = self.metrics.requeues
-        actions = cl.pipeline.drain(
-            step, sources=(FaultSource.COLLECTIVE, FaultSource.HEARTBEAT))
-        actions = actions + cl.pipeline.drain(
-            step, sources=(FaultSource.STRAGGLER,))
+        self._comm.gather(among=set(self._inflight))
+        self.session.poll((FaultSource.STRAGGLER,))
+        actions = list(self.session.take_actions())
         # safety net: a dead node whose loss produced no verdict this round
         # (e.g. no surviving observer) still must not strand its batch —
         # redeliver now; the heartbeat channel will confirm the node later
@@ -277,8 +281,8 @@ class ServeEngine:
             completed_now=len(self.completed) - completed_before,
             requeued_now=self.metrics.requeues - requeues_before,
             actions=tuple(actions),
-            respawned=tuple(respawned),
-            expanded=tuple(s for r in expansions for s in r.substitutions),
+            respawned=boundary.respawned,
+            expanded=boundary.expanded,
             backlog=self.router.backlog,
             inflight=sum(len(b) for b in self._inflight.values()),
             wall_seconds=time.perf_counter() - t_start,

@@ -1,0 +1,317 @@
+"""repro.mpi facade: conformance vs direct collectives, transparency under
+fault campaigns, and fault-aware point-to-point conservation.
+
+Two flavors per property (matching tests/test_hierarchy_depth.py): a
+hypothesis test (CI) and a deterministic hand-driven campaign that runs
+when hypothesis is absent (the conftest stub skips the @given flavors).
+"""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    FaultInjector,
+    HierarchicalCollectives,
+    LegioPolicy,
+    VirtualCluster,
+)
+from repro.mpi import (
+    MPISessionError,
+    MsgState,
+    PeerFailedError,
+    RecvWouldDeadlockError,
+    Session,
+)
+
+
+def healthy_session(n: int, k: int = 4) -> Session:
+    return Session(n, policy=LegioPolicy(legion_size=k))
+
+
+# ---------------------------------------------------------------------------
+# conformance: every collective is byte-identical through the facade
+# ---------------------------------------------------------------------------
+
+def assert_conformance(n: int, k: int, payload: np.ndarray) -> None:
+    """On a healthy cluster the facade must add bookkeeping only: same
+    payload bytes at every node, and exactly the same schedule stages as a
+    direct HierarchicalCollectives call (zero extra collective stages)."""
+    sess = healthy_session(n, k)
+    comm = sess.world
+    direct = HierarchicalCollectives(sess.cluster.topo, sess.cluster.link)
+    contributions = {m: payload * (m + 1) for m in comm.members}
+
+    fac = comm.bcast(payload, root=comm.members[0])
+    ref = direct.bcast(comm.members[0], payload)
+    assert sorted(fac.data) == sorted(ref.data)
+    assert all(fac.data[m].tobytes() == ref.data[m].tobytes()
+               for m in ref.data)
+    assert fac.stages == ref.stages
+
+    fac = comm.reduce(contributions, root=comm.members[0])
+    ref = direct.reduce(comm.members[0], dict(contributions))
+    assert fac.data[comm.members[0]].tobytes() == \
+        ref.data[comm.members[0]].tobytes()
+    assert fac.stages == ref.stages
+
+    fac = comm.allreduce(contributions)
+    ref = direct.allreduce(dict(contributions))
+    assert sorted(fac.data) == sorted(ref.data)
+    assert all(fac.data[m].tobytes() == ref.data[m].tobytes()
+               for m in ref.data)
+    assert fac.stages == ref.stages
+
+    fac = comm.barrier()
+    ref = direct.barrier()
+    assert sorted(fac.data) == sorted(ref.data)
+    assert len(fac.stages) == len(ref.stages)
+
+    # fault-free bookkeeping is O(1) per call: exactly one pipeline drain
+    # per op, zero repair rounds
+    assert comm.stats.calls == 4
+    assert comm.stats.drains == comm.stats.calls
+    assert comm.stats.repair_rounds == 0
+
+
+@given(n=st.integers(4, 48), k=st.integers(2, 6),
+       width=st.integers(1, 64))
+def test_collective_conformance_property(n, k, width):
+    assert_conformance(n, k, np.arange(width, dtype=np.float64))
+
+
+def test_collective_conformance_deterministic():
+    for n, k in [(4, 2), (8, 4), (16, 4), (24, 5), (40, 4)]:
+        assert_conformance(n, k, np.arange(16, dtype=np.float64))
+
+
+# ---------------------------------------------------------------------------
+# transparency: an MPI-shaped loop survives injected faults untouched
+# ---------------------------------------------------------------------------
+
+def test_allreduce_campaign_is_transparent():
+    """Zero fault-handling code: the loop below never mentions faults, yet
+    two nodes (one a legion master) die mid-campaign and every allreduce
+    returns the exact survivor sum."""
+    sess = Session(16, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(2, 9), (4, 0)]))
+    comm = sess.world
+    for step in range(7):
+        sess.advance(step)
+        res = comm.allreduce({m: np.array([float(m + 1)])
+                              for m in comm.members
+                              if m not in sess.cluster.failed})
+        live = sess.cluster.live_nodes
+        assert res.data[live[0]][0] == sum(m + 1 for m in live)
+    assert comm.size == 14
+    assert 9 not in comm.members and 0 not in comm.members
+    assert comm.stats.repair_rounds >= 2          # both faults trapped
+
+
+def test_root_failure_surfaces_once_then_rehomes():
+    sess = Session(8, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(1, 0)]))
+    comm = sess.world
+    contribs = lambda: {m: np.ones(2) for m in sess.cluster.live_nodes}  # noqa: E731
+    sess.advance(0)
+    comm.reduce(contribs(), root=0)
+    sess.advance(1)
+    with pytest.raises(PeerFailedError) as exc:
+        comm.reduce(contribs(), root=0)
+    assert exc.value.peers == (0,)
+    assert 0 not in comm.members                  # repair already landed
+    sess.advance(2)
+    res = comm.reduce(contribs(), root=0)         # re-homed, no error
+    assert res.data[comm.members[0]][0] == comm.size
+
+
+# ---------------------------------------------------------------------------
+# point-to-point: fault-aware matching, discard semantics, conservation
+# ---------------------------------------------------------------------------
+
+def test_p2p_roundtrip_and_fifo_order():
+    sess = healthy_session(8)
+    comm = sess.world
+    comm.send(1, 2, "a")
+    comm.send(1, 2, "b")
+    assert comm.probe(2, 1)
+    assert comm.recv(2, 1) == "a"                 # non-overtaking
+    assert comm.recv(2, 1) == "b"
+    with pytest.raises(RecvWouldDeadlockError):
+        comm.recv(2, 1)                           # live peer, nothing posted
+
+
+def test_message_posted_before_sender_death_still_delivers():
+    sess = Session(8, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(1, 3)]))
+    comm = sess.world
+    sess.advance(0)
+    comm.send(3, 5, "in-flight")
+    sess.advance(1)                               # node 3 dies mid-flight
+    assert comm.recv(5, 3) == "in-flight"         # buffered payload survives
+    # a second recv from the now-dead peer resolves to the discard outcome
+    # (and repairs the communicator) instead of deadlocking
+    with pytest.raises(PeerFailedError) as exc:
+        comm.recv(5, 3)
+    assert exc.value.discarded
+    assert 3 not in comm.members
+
+
+def test_messages_to_dead_destination_are_discarded_on_repair():
+    sess = Session(8, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(1, 6)]))
+    comm = sess.world
+    sess.advance(0)
+    comm.send(2, 6, "doomed")
+    sess.advance(1)
+    comm.barrier()                                # any call repairs node 6
+    assert 6 not in comm.members
+    assert comm.ledger.discarded == 1             # envelope resolved, not lost
+    assert comm.ledger.conserved()
+    with pytest.raises(PeerFailedError):
+        comm.send(2, 6, "late")                   # dead peer: clean error
+
+
+def run_p2p_campaign(seed: int, n: int = 12, steps: int = 8) -> None:
+    """Random sends/recvs under a random fault schedule: no message may be
+    lost (posted == delivered + discarded + pending) and none delivered
+    twice."""
+    rng = random.Random(seed)
+    victims = rng.sample(range(n), rng.randint(1, 3))
+    faults = [(rng.randint(1, steps - 2), v) for v in victims]
+    sess = Session(n, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at(faults))
+    comm = sess.world
+    sent, received = 0, []
+    for step in range(steps):
+        sess.advance(step)
+        for _ in range(rng.randint(1, 5)):
+            live = sess.cluster.live_nodes
+            if len(live) < 2:
+                break
+            src = rng.choice(live)
+            dst = rng.choice([m for m in comm.members if m != src])
+            try:
+                comm.send(src, dst, ("payload", sent))
+                sent += 1
+            except PeerFailedError:
+                pass                              # dead peer: clean surfacing
+        for _ in range(rng.randint(1, 5)):
+            live = sess.cluster.live_nodes
+            if len(live) < 2:
+                break
+            dst = rng.choice(live)
+            src = rng.choice([m for m in comm.members if m != dst])
+            if comm.probe(dst, src):
+                received.append(comm.recv(dst, src))
+    comm.barrier()                                # flush any pending repair
+    ledger = comm.ledger
+    assert ledger.posted == sent
+    assert ledger.delivered == len(received)
+    assert len(set(received)) == len(received)    # no double delivery
+    assert ledger.conserved()                     # no loss
+    live = set(sess.cluster.live_nodes)
+    for env in ledger.envelopes:                  # nothing pending to a ghost
+        if env.state is MsgState.POSTED:
+            assert env.dst in live
+
+
+@given(seed=st.integers(0, 10_000))
+def test_p2p_campaign_conservation_property(seed):
+    run_p2p_campaign(seed)
+
+
+def test_p2p_campaign_conservation_deterministic():
+    for seed in range(12):
+        run_p2p_campaign(seed)
+
+
+# ---------------------------------------------------------------------------
+# comm creators: split/dup isolation (paper §V comm-creator class)
+# ---------------------------------------------------------------------------
+
+def test_comm_split_scopes_collectives_to_the_subgroup():
+    sess = healthy_session(16)
+    comm = sess.world
+    subs = comm.comm_split({m: m % 2 for m in comm.members})
+    assert sorted(subs) == [0, 1]
+    assert subs[0].size == subs[1].size == 8
+    res = subs[1].allreduce({m: np.array([1.0]) for m in subs[1].members})
+    assert set(res.data) == set(subs[1].members)  # nobody outside the color
+    assert res.data[1][0] == 8.0
+    assert subs[1].rank_of(subs[1].members[0]) == 0
+
+
+def test_comm_split_subgroup_shrinks_with_faults():
+    sess = Session(16, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(1, 2)]))
+    comm = sess.world
+    evens = comm.comm_split({m: m % 2 for m in comm.members})[0]
+    sess.advance(0)
+    sess.advance(1)
+    res = evens.allreduce({m: np.array([1.0]) for m in evens.members
+                           if m not in sess.cluster.failed})
+    assert 2 not in evens.members and evens.size == 7
+    assert res.data[0][0] == 7.0
+
+
+def test_comm_dup_is_a_separate_matching_context():
+    sess = healthy_session(8)
+    comm = sess.world
+    dup = comm.comm_dup()
+    comm.send(1, 2, "original-context")
+    assert not dup.probe(2, 1)                    # contexts never cross-match
+    assert comm.recv(2, 1) == "original-context"
+    dup.free()
+    with pytest.raises(MPISessionError):          # use-after-free is loud,
+        dup.barrier()                             # never a silent skip
+
+
+def test_keyed_attach_replaces_instead_of_stacking():
+    """The world comm is shared per cluster: a consumer re-attached under
+    the same key must replace its hook, not accumulate duplicates."""
+    sess = healthy_session(8)
+    calls = []
+    sess.world.attach(lambda op, view: calls.append("a"), key="k")
+    sess.world.attach(lambda op, view: calls.append("b"), key="k")
+    sess.world.barrier()
+    assert calls == ["b"]                         # one hook, the latest
+    sess.world.detach("k")
+    sess.world.barrier()
+    assert calls == ["b"]
+
+
+def test_send_from_a_dead_caller_is_a_driver_bug():
+    """A node dead since the boundary is still a topology member, but the
+    simulation never runs code on it — send/recv *from* it must be loud."""
+    sess = Session(8, policy=LegioPolicy(legion_size=4),
+                   injector=FaultInjector.at([(0, 3)]))
+    sess.world.barrier()                          # register step-0 state
+    sess.cluster.inject(0)                        # node 3 dies, unrepaired
+    assert 3 in sess.world.members                # ULFM window: still member
+    with pytest.raises(ValueError):
+        sess.world.send(3, 1, "ghost")
+    with pytest.raises(ValueError):
+        sess.world.recv(3, 1)
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_finalize_freezes_the_surface():
+    with healthy_session(8) as sess:
+        sess.world.barrier()
+    with pytest.raises(MPISessionError):
+        sess.world.barrier()
+    with pytest.raises(MPISessionError):
+        sess.advance()
+    # post-mortems stay readable after finalize
+    assert sess.cluster.topo.size == 8
+
+
+def test_adopt_is_shared_per_cluster():
+    cl = VirtualCluster(8)
+    assert Session.adopt(cl) is Session.adopt(cl)
+    assert Session.adopt(cl).cluster is cl

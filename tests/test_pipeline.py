@@ -162,6 +162,31 @@ def test_respawned_spares_preserve_finality_and_masters(data):
 
 
 # ---------------------------------------------------------------------------
+# heartbeat detector: unknown beats must not poison the sweep (regression)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_beat_from_unregistered_node_does_not_break_sweep():
+    """beat() on a never-registered node used to write last_seen without a
+    states entry, so the next sweep() raised KeyError. Unknown beats now
+    auto-register the node instead."""
+    from repro.core import HeartbeatDetector
+
+    det = HeartbeatDetector(timeout=5.0)
+    det.register(0)
+    det.beat(99, 1.0)                       # never registered before
+    assert det.sweep(2.0) == []             # no KeyError, nothing suspect
+    assert det.states[99].value == "healthy"
+    # the auto-registered node participates in detection like any other
+    assert det.sweep(8.0) == [0, 99]
+    det.beat(99, 9.0)
+    assert det.states[99].value == "healthy"   # suspicion cleared by beat
+    # and a beat from a confirmed-failed node stays ignored (permanent)
+    det.confirm_failed(0)
+    det.beat(0, 10.0)
+    assert det.states[0].value == "failed"
+
+
+# ---------------------------------------------------------------------------
 # heartbeat channel (previously dead code) reaches agreement
 # ---------------------------------------------------------------------------
 
