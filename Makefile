@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint docs bench-quick bench bench-json mpi-demo install-dev
+.PHONY: test lint docs bench-quick bench bench-json mpi-demo chaos-demo install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,16 +18,21 @@ docs:
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
 # + N-level scoped-repair scaling + MPI-facade transparency overhead
+# + the correlated-failure invariant matrix
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling interposition
+	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling interposition chaos
 
-# same smoke, plus machine-readable results in BENCH_PR5.json (CI artifact)
+# same smoke, plus machine-readable results in BENCH_PR6.json (CI artifact)
 bench-json:
-	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling interposition
+	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling interposition chaos
 
 # the transparency claim, live: an unmodified MPI-shaped loop surviving faults
 mpi-demo:
 	$(PYTHON) examples/transparent_mpi.py
+
+# two chaos presets end-to-end, narrated (CI's fault-pipeline smoke test)
+chaos-demo:
+	$(PYTHON) examples/chaos_campaign.py --preset rack_outage --preset transient_flap
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -4,10 +4,10 @@
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
   PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
                                                      # + machine-readable
-                                                     #   BENCH_PR5.json
+                                                     #   BENCH_PR6.json
 
 ``--json`` records per-suite status/wall-seconds (and whatever dict a
-suite's ``main()`` returns) to ``BENCH_PR5.json`` — the CI artifact. The
+suite's ``main()`` returns) to ``BENCH_PR6.json`` — the CI artifact. The
 asserts inside the suites stay structural (the bench-smoke convention);
 the JSON is for dashboards, not pass/fail.
 """
@@ -34,9 +34,11 @@ SUITES = [
     ("interposition_overhead", "benchmarks.interposition_overhead",
      "§VI transparency overhead"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
+    ("chaos_campaign", "benchmarks.chaos_campaign",
+     "§III-V fault-model zoo"),
 ]
 
-JSON_PATH = "BENCH_PR5.json"
+JSON_PATH = "BENCH_PR6.json"
 
 
 def main() -> int:

@@ -29,6 +29,12 @@ from repro.core.batch import (
     substitute_assign,
     validate_plan,
 )
+from repro.core.chaos import (
+    ChaosHarness,
+    ChaosReport,
+    InvariantCheck,
+    check_topology_coherence,
+)
 from repro.core.collectives import (
     HierarchicalCollectives,
     LinkModel,
@@ -48,6 +54,7 @@ from repro.core.executor import (
     StepReport,
     VirtualCluster,
 )
+from repro.core.faultmodel import ChaosEvent, FaultCampaign, FaultModel
 from repro.core.hierarchy import (
     Legion,
     LegionTopology,
@@ -89,6 +96,7 @@ from repro.core.substitute import (
 )
 from repro.core.trainer import ResilientTrainer, TrainerReport, make_train_step
 from repro.core.types import (
+    ChaosAction,
     FailureEvent,
     FailureKind,
     FaultEvent,
@@ -103,9 +111,11 @@ from repro.core.types import (
 )
 
 __all__ = [
-    "BatchPlan", "CompileCache", "DevicePool", "FailureEvent", "FailureKind",
-    "FaultEvent", "FaultInjector", "FaultPipeline", "FaultSource",
-    "HeartbeatDetector", "HierarchicalCollectives",
+    "BatchPlan", "ChaosAction", "ChaosEvent", "ChaosHarness", "ChaosReport",
+    "CompileCache", "DevicePool", "FailureEvent", "FailureKind",
+    "FaultCampaign", "FaultEvent", "FaultInjector", "FaultModel",
+    "FaultPipeline", "FaultSource",
+    "HeartbeatDetector", "HierarchicalCollectives", "InvariantCheck",
     "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
     "LegioPolicy", "LevelGroup", "LinkModel", "MeshManager", "NodeState",
     "NonblockingSubstituteStrategy", "OpStatus", "PendingSubstitution",
@@ -117,7 +127,8 @@ __all__ = [
     "SubstituteCostModel", "SubstituteEngine", "SubstituteStrategy",
     "TopologyTornError", "TopologyView", "TrainerReport", "UnfilledSlot",
     "VirtualCluster", "agree_fault", "agreement_rounds", "agreement_time",
-    "available_strategies", "failures_by_legion", "flat_collective_time",
+    "available_strategies", "check_topology_coherence",
+    "failures_by_legion", "flat_collective_time",
     "gradient_scale",
     "initial_assignment", "liveness_psum",
     "make_strategy", "make_topology", "make_train_step", "notice_fault",

@@ -30,10 +30,28 @@ class HeartbeatDetector:
     timeout: float
     last_seen: dict[int, float] = field(default_factory=dict)
     states: dict[int, NodeState] = field(default_factory=dict)
+    # incarnation guard: the topology epoch at which a node was confirmed
+    # FAILED. A flapped node (transient power/network loss that returns
+    # after the repair already evicted it) re-announces itself with its
+    # *old* identity; without the guard, register() made it HEALTHY again
+    # and the next sweep treated it as freshly live — resurrecting a node
+    # the agreement already buried. Re-registration now needs a strictly
+    # newer epoch, i.e. a deliberate re-provisioning, not a stale beat.
+    epochs: dict[int, int] = field(default_factory=dict)
 
-    def register(self, node: int, now: float = 0.0) -> None:
+    def register(self, node: int, now: float = 0.0, *,
+                 epoch: int | None = None) -> bool:
+        """Admit ``node`` as HEALTHY. Returns False (and changes nothing)
+        for a FAILED node unless ``epoch`` is strictly newer than the epoch
+        recorded when it was repaired out — the flap guard."""
+        if self.states.get(node) is NodeState.FAILED:
+            if epoch is None or epoch <= self.epochs.get(node, 0):
+                return False
+        if epoch is not None:
+            self.epochs[node] = max(epoch, self.epochs.get(node, 0))
         self.last_seen[node] = now
         self.states[node] = NodeState.HEALTHY
+        return True
 
     def beat(self, node: int, now: float) -> None:
         if self.states.get(node) == NodeState.FAILED:
@@ -58,8 +76,12 @@ class HeartbeatDetector:
                 fresh.append(node)
         return sorted(fresh)
 
-    def confirm_failed(self, node: int) -> None:
+    def confirm_failed(self, node: int, *, epoch: int | None = None) -> None:
+        """Bury ``node``. ``epoch`` (the topology epoch of the repair that
+        evicted it) arms the flap guard: see :meth:`register`."""
         self.states[node] = NodeState.FAILED
+        if epoch is not None:
+            self.epochs[node] = max(epoch, self.epochs.get(node, 0))
 
     def suspects(self) -> list[int]:
         return sorted(n for n, s in self.states.items() if s == NodeState.SUSPECT)

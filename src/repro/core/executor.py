@@ -144,14 +144,18 @@ class VirtualCluster:
             if e.node in self.topo.nodes:
                 self.failed.add(e.node)
             elif e.node in self.spare_pool.available:
-                # a warm spare can die too — it must never be spliced in
+                # a warm spare can die too — it must never be spliced in,
+                # and the detector must bury it: without confirm_failed a
+                # later stale beat auto-registered the dead spare HEALTHY
                 self.failed.add(e.node)
                 self.spare_pool.available.remove(e.node)
+                self.detector.confirm_failed(e.node, epoch=self.topo.epoch)
             elif any(p.spare == e.node for p in self.pending):
                 # died while warming up: reschedule the splice on the next
                 # warm spare (fresh warmup); with the pool empty the slot
                 # stays shrunk — fatal under strict substitute semantics
                 self.failed.add(e.node)
+                self.detector.confirm_failed(e.node, epoch=self.topo.epoch)
                 dead = [p for p in self.pending if p.spare == e.node]
                 self.pending = [p for p in self.pending if p.spare != e.node]
                 for p in dead:
@@ -253,6 +257,7 @@ class VirtualCluster:
                     worst = max(worst, exc.partial_report.model_cost)
                 if worst:
                     self.clock.charge(worst)
+                    self._refresh_liveness()
                 raise
             self._stamp_scope(report, scope)
             self._commit_repair(verdict, report, charge=False)
@@ -260,6 +265,7 @@ class VirtualCluster:
             out.append((scope, report))
         if worst:
             self.clock.charge(worst)
+            self._refresh_liveness()
         return out
 
     @staticmethod
@@ -272,11 +278,23 @@ class VirtualCluster:
     def _commit_repair(self, verdict: set[int], report: RepairReport,
                        charge: bool = True) -> None:
         for n in verdict:
-            self.detector.confirm_failed(n)
+            self.detector.confirm_failed(n, epoch=self.topo.epoch)
             self.straggler.drop(n)
         if charge:
             self.clock.charge(report.model_cost)
+            self._refresh_liveness()
         self.repairs.append(report)
+
+    def _refresh_liveness(self) -> None:
+        """Re-stamp every survivor's heartbeat after a repair charge. The
+        repair is collective among the survivors (ULFM: everyone enters
+        MPIX_Comm_shrink), so its simulated duration must not count
+        against their heartbeat deadlines — without this, a repair whose
+        S(x) cost exceeds heartbeat_timeout (a whole rack under
+        substitution) made the next sweep condemn the entire cluster."""
+        now = self.clock.sim_seconds
+        for n in self.live_nodes:
+            self.detector.beat(n, now)
 
     # -- deferred (non-blocking) substitution --------------------------------
 

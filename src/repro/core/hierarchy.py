@@ -38,6 +38,8 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Iterator
 
+import numpy as np
+
 from repro.core.policy import LegioPolicy
 from repro.core.types import RepairScope
 
@@ -120,6 +122,12 @@ class LegionTopology:
         default_factory=list, init=False, repr=False, compare=False)
     _levels_epoch: int = field(default=-1, init=False, repr=False,
                                compare=False)
+    # scoped-repair index tables (ring order, parent pointers, numpy member
+    # arrays), rebuilt lazily per epoch — see _scope_tables
+    _scope_cache: list[dict] = field(
+        default_factory=list, init=False, repr=False, compare=False)
+    _scope_epoch: int = field(default=-1, init=False, repr=False,
+                              compare=False)
 
     def __post_init__(self) -> None:
         self._reindex()
@@ -380,12 +388,75 @@ class LegionTopology:
 
     # ---- scoped repair (Rocco & Palermo: confine repair to the fault) --------
 
+    def _scope_tables(self) -> list[dict]:
+        """Per-epoch index tables for the scoped-repair hot path: ring
+        order, position, parent pointers, masters, and numpy member arrays
+        per ``(level, group)``. Campaign-scale injection (10^4 chaos
+        campaigns) made the per-call O(n) scans in ``fault_groups`` /
+        ``partition_scopes`` dominate; one O(n) build per topology epoch
+        amortizes every later lookup to O(1)."""
+        if self._scope_epoch == self.epoch:
+            return self._scope_cache
+        per_level = [self.groups(0)] + self.levels()
+        tables: list[dict] = []
+        for lvl_groups in per_level:
+            order = [g.index for g in lvl_groups]
+            tables.append({
+                "order": order,
+                "pos": {gi: i for i, gi in enumerate(order)},
+                # members are kept sorted by every mutator, so [0] is the
+                # master (lowest rank) without a min() scan
+                "members": {g.index: np.asarray(g.members, dtype=np.int64)
+                            for g in lvl_groups},
+                "master": {g.index: g.members[0]
+                           for g in lvl_groups if g.members},
+                "parent": {},
+            })
+        for lvl, lvl_groups in enumerate(per_level[1:], start=1):
+            for g in lvl_groups:
+                for ci in g.children:
+                    tables[lvl - 1]["parent"][ci] = g.index
+        self._scope_cache, self._scope_epoch = tables, self.epoch
+        return tables
+
     def fault_groups(self, node: int) -> set[tuple[int, int]]:
         """The minimal set of ``(level, group index)`` comms whose repair the
         failure of ``node`` forces. A worker fault touches only its legion;
         a master fault adds the level-0 ring neighbours' POVs and the parent
         comm, and keeps climbing exactly as long as the dead node also held
-        the mastership of the group above."""
+        the mastership of the group above.
+
+        O(depth) per call against the per-epoch :meth:`_scope_tables`
+        (``_fault_groups_reference`` is the retained O(n) original the
+        property tests diff against)."""
+        lg = self.legion_of(node)
+        touched = {(0, lg.index)}
+        if self.depth <= 1:
+            return touched
+        tables = self._scope_tables()
+        if len(tables[0]["order"]) <= 1:
+            return touched
+        level, idx, master = 0, lg.index, lg.members[0]
+        while master == node and level < self.depth - 1:
+            tab = tables[level]
+            order = tab["order"]
+            if len(order) > 1:
+                i = tab["pos"][idx]
+                touched.add((level, order[(i - 1) % len(order)]))
+                touched.add((level, order[(i + 1) % len(order)]))
+            parent_idx = tab["parent"].get(idx)
+            if parent_idx is None:
+                raise StaleLegionError(
+                    f"group {idx} at level {level} has no parent "
+                    f"(depth {self.depth}, epoch {self.epoch})")
+            touched.add((level + 1, parent_idx))
+            level, idx = level + 1, parent_idx
+            master = tables[level]["master"][idx]
+        return touched
+
+    def _fault_groups_reference(self, node: int) -> set[tuple[int, int]]:
+        """Pre-vectorization implementation (per-member Python scans),
+        kept as the oracle for the byte-identical-output property tests."""
         lg = self.legion_of(node)
         touched = {(0, lg.index)}
         if self.depth <= 1 or len(self.masters) <= 1:
@@ -408,18 +479,102 @@ class LegionTopology:
         that repair concurrently. Verdict nodes no longer in the topology
         (a spare that died warm, a node a previous drain already removed)
         ride along on the first scope so the one-terminal-action-per-fault
-        invariant holds for them too."""
+        invariant holds for them too.
+
+        Vectorized: participant sets are numpy index arrays unioned with
+        ``np.unique``/``np.concatenate``, and the transitive merge is a
+        union-find keyed on claimed participants/groups — same equivalence
+        classes as the reference fixpoint (two scopes merge iff they share
+        a participant or a comm), emitted in the same order (each class is
+        represented by its earliest component, and components are created
+        in ascending verdict order). ``_partition_scopes_reference`` is the
+        retained original; tests assert byte-identical output."""
         present = [n for n in sorted(verdict)
                    if n in self.home and n in self._by_member]
         absent = sorted(set(verdict) - set(present))
-        # merge on PARTICIPANT overlap, not just shared comms: a node that
-        # must enter two repairs (e.g. a legion master pulled into both its
-        # local shrink and a neighbour's root-comm shrink at depth 2)
-        # serializes them — only truly participant-disjoint scopes may
-        # claim concurrency
+        tables = self._scope_tables()
+        components: list[tuple[int, set[tuple[int, int]], np.ndarray]] = []
+        for n in present:
+            groups = self.fault_groups(n)
+            arrs = [tables[lvl]["members"][gi] for lvl, gi in groups]
+            parts = (np.unique(np.concatenate(arrs)) if arrs
+                     else np.empty(0, dtype=np.int64))
+            components.append((n, groups, parts))
+        # union-find over shared claims — merge on PARTICIPANT overlap, not
+        # just shared comms: a node that must enter two repairs (e.g. a
+        # legion master pulled into both its local shrink and a neighbour's
+        # root-comm shrink at depth 2) serializes them — only truly
+        # participant-disjoint scopes may claim concurrency
+        root = list(range(len(components)))
+
+        def find(i: int) -> int:
+            while root[i] != i:
+                root[i] = root[root[i]]
+                i = root[i]
+            return i
+
+        def union(a: int, b: int) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                # the earlier component absorbs the later one, matching the
+                # reference fixpoint's output order
+                if rb < ra:
+                    ra, rb = rb, ra
+                root[rb] = ra
+
+        claimed_group: dict[tuple[int, int], int] = {}
+        claimed_part: dict[int, int] = {}
+        for i, (_, groups, parts) in enumerate(components):
+            for g in groups:
+                owner = claimed_group.setdefault(g, i)
+                if owner != i:
+                    union(i, owner)
+            for p in parts.tolist():
+                owner = claimed_part.setdefault(p, i)
+                if owner != i:
+                    union(i, owner)
+        merged: dict[int, tuple[set[int], set[tuple[int, int]],
+                                list[np.ndarray]]] = {}
+        order: list[int] = []
+        for i, (n, groups, parts) in enumerate(components):
+            r = find(i)
+            if r not in merged:
+                merged[r] = (set(), set(), [])
+                order.append(r)
+            m_nodes, m_groups, m_parts = merged[r]
+            m_nodes.add(n)
+            m_groups |= groups
+            m_parts.append(parts)
+        verdict_arr = np.asarray(sorted(verdict), dtype=np.int64)
+        scopes = []
+        for r in order:
+            nodes, groups, part_arrs = merged[r]
+            parts = np.unique(np.concatenate(part_arrs))
+            parts = parts[~np.isin(parts, verdict_arr)]
+            scopes.append(RepairScope(
+                verdict=tuple(sorted(nodes)),
+                level=max(lvl for lvl, _ in groups),
+                groups=tuple(sorted(groups)),
+                participants=tuple(int(p) for p in parts)))
+        if absent:
+            if scopes:
+                scopes[0] = replace(scopes[0], verdict=tuple(
+                    sorted(set(scopes[0].verdict) | set(absent))))
+            else:
+                scopes = [RepairScope(verdict=tuple(absent), level=0,
+                                      groups=(), participants=())]
+        return scopes
+
+    def _partition_scopes_reference(self, verdict: set[int]
+                                    ) -> list[RepairScope]:
+        """Pre-vectorization implementation (set fixpoint over per-member
+        scans), kept as the oracle for the byte-identical-output tests."""
+        present = [n for n in sorted(verdict)
+                   if n in self.home and n in self._by_member]
+        absent = sorted(set(verdict) - set(present))
         components: list[tuple[set[int], set[tuple[int, int]], set[int]]] = []
         for n in present:
-            groups = set(self.fault_groups(n))
+            groups = set(self._fault_groups_reference(n))
             participants: set[int] = set()
             for lvl, gi in groups:
                 participants.update(self.group_at(lvl, gi).members)

@@ -102,6 +102,25 @@ class FaultPipeline:
                 source=FaultSource.COLLECTIVE, op=op, root=root,
                 participants=tuple(participants)))
 
+    def observe_suspicion(self, observers: Iterable[int],
+                          suspects: Iterable[int],
+                          step: int | None = None) -> None:
+        """One *side's* suspicion of the other — the correlated-failure
+        injection channel (network partitions, gray switches). Unlike the
+        coordinator heartbeat (every live node reads it), this suspicion is
+        held only by ``observers``: the notice stage credits exactly them,
+        and agreement takes the union over LIVE observers — so a fenced
+        side's accusation of the survivors never enters the verdict. If
+        both sides stay alive (unfenced split), the agree stage's majority
+        quorum condemns exactly the minority — see :meth:`_agree`."""
+        observers = tuple(sorted(set(observers)))
+        suspects = tuple(sorted(set(suspects)))
+        if observers and suspects:
+            self.observe(FaultEvent(
+                nodes=suspects,
+                step=self.cluster._step if step is None else step,
+                source=FaultSource.HEARTBEAT, observers=observers))
+
     # -- stages ---------------------------------------------------------------
 
     def _detect(self, step: int,
@@ -124,13 +143,22 @@ class FaultPipeline:
                                          kind=FailureKind.STRAGGLE))
         return events
 
-    def _notice(self, events: list[FaultEvent]) -> dict[int, set[int]]:
+    def _notice(self, events: list[FaultEvent]
+                ) -> tuple[dict[int, set[int]], set[int]]:
         """Per-observer suspicion sets. Collective events notice per the
         op's semantics (bcast partially — the BNP); heartbeat/straggler/
-        injected suspicion is coordinator state every live node reads."""
+        injected suspicion is coordinator state every live node reads —
+        unless the event carries explicit ``observers`` (the partition
+        channel: each side's suspicion is its own side's knowledge only).
+
+        Also returns the suspects accused *only* through observer-carrying
+        events — those hold no ground truth, so the agree stage demands a
+        majority quorum before condemning them."""
         cl = self.cluster
         live = set(cl.live_nodes)
         observations: dict[int, set[int]] = {}
+        suspicion_only: set[int] = set()
+        grounded: set[int] = set()
         for e in events:
             failed = set(e.nodes)
             if e.source is FaultSource.COLLECTIVE:
@@ -138,14 +166,43 @@ class FaultPipeline:
                            else cl.topo.nodes)
                 noticers = notice_fault(e.op or "allreduce", members,
                                         failed, root=e.root)
+                grounded |= failed
+            elif e.observers is not None:
+                # partition-style one-sided suspicion: only the event's own
+                # observers hold it (and only while they live — a fenced
+                # side's accusations die with it at the agree stage)
+                noticers = set(e.observers) & live
+                suspicion_only |= failed
             else:
                 noticers = live
+                grounded |= failed
             for obs in noticers:
                 observations.setdefault(obs, set()).update(failed)
-        return observations
+        return observations, suspicion_only - grounded
 
-    def _agree(self, observations: dict[int, set[int]]) -> set[int]:
-        return agree_fault(observations, self.cluster.live_nodes)
+    def _agree(self, observations: dict[int, set[int]],
+               suspicion_only: set[int]) -> set[int]:
+        """``agree_fault`` union, then the split-brain guard: a suspect
+        backed by no ground-truth channel needs accusers from a strict
+        majority of live nodes. Under an unfenced two-sided partition both
+        sides accuse each other while alive — the plain union would condemn
+        everyone; the quorum condemns exactly the minority (the same
+        resolution a real quorum-based membership service applies). Ground
+        -truth channels (collective PROC_FAILED, heartbeat timeout,
+        injected) are untouched, so BNP partial noticing still condemns a
+        genuinely dead node on a single live observation."""
+        live = self.cluster.live_nodes
+        verdict = agree_fault(observations, live)
+        if not suspicion_only:
+            return verdict
+        live_set = set(live)
+        quorum = len(live) // 2 + 1
+        for s in suspicion_only & verdict:
+            accusers = sum(1 for obs, seen in observations.items()
+                           if s in seen and obs in live_set)
+            if accusers < quorum:
+                verdict.discard(s)
+        return verdict
 
     def _plan(self, verdict: set[int], events: list[FaultEvent]
               ) -> tuple[str, set[int], list[RepairScope]]:
@@ -190,11 +247,11 @@ class FaultPipeline:
             return []
 
         t0 = time.perf_counter()
-        observations = self._notice(events)
+        observations, suspicion_only = self._notice(events)
         timings["notice"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        verdict = self._agree(observations)
+        verdict = self._agree(observations, suspicion_only)
         timings["agree"] = time.perf_counter() - t0
         if not verdict:
             return []

@@ -116,6 +116,13 @@ class LegioPolicy:
     # in ServeMetrics.parked, never silently dropped).
     serve_microbatch: int = 4
     serve_max_attempts: int = 0
+    # --- correlated-failure scenarios (repro.core.faultmodel): knobs the
+    # named presets read when generating seeded chaos campaigns.
+    chaos_fault_fraction: float = 0.125  # independent: fraction of nodes hit
+    chaos_partition_fence: bool = True   # fence the minority side of a split
+    chaos_flap_delay_steps: int = 2      # steps between repair-out and return
+    chaos_cascade_victims: int = 2       # secondary stragglers per cascade
+    chaos_cascade_slowdown: float = 4.0  # latency multiplier on secondaries
 
     def __post_init__(self) -> None:
         if self.hierarchy_depth < 0:
@@ -134,6 +141,14 @@ class LegioPolicy:
             raise ValueError("serve_microbatch must be positive")
         if self.serve_max_attempts < 0:
             raise ValueError("serve_max_attempts must be >= 0")
+        if not 0.0 <= self.chaos_fault_fraction <= 1.0:
+            raise ValueError("chaos_fault_fraction must be in [0, 1]")
+        if self.chaos_flap_delay_steps < 1:
+            raise ValueError("chaos_flap_delay_steps must be >= 1")
+        if self.chaos_cascade_victims < 0:
+            raise ValueError("chaos_cascade_victims must be >= 0")
+        if self.chaos_cascade_slowdown <= 0:
+            raise ValueError("chaos_cascade_slowdown must be positive")
 
     def choose_k(self, s: int) -> int:
         if self.legion_size > 0:

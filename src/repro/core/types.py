@@ -102,6 +102,24 @@ class FaultEvent:
     root: int | None = None      # the op's root, for bcast noticing
     participants: tuple[int, ...] | None = None  # the op's member set; None
                                  # = resolve against the topology at drain
+    # who holds this suspicion (correlated-failure channel): None keeps the
+    # historical semantics — every live node reads the coordinator state.
+    # A network partition is the asymmetric case: each side suspects the
+    # *other* side, so its event carries only that side's observers, and
+    # agreement (the union over LIVE observers) is what makes the fenced
+    # side's accusations moot — both sides converge on one verdict.
+    observers: tuple[int, ...] | None = None
+
+
+class ChaosAction(enum.Enum):
+    """What one timed event of a fault campaign does to the cluster
+    (:mod:`repro.core.faultmodel` presets emit these; the
+    :class:`~repro.core.chaos.ChaosHarness` applies them)."""
+
+    CRASH = "crash"            # ground-truth node death (FaultInjector)
+    SUSPECT = "suspect"        # one-sided suspicion held by `observers` only
+    SLOWDOWN = "slowdown"      # inflate a node's observed step latency
+    FLAP_RETURN = "flap_return"  # a repaired-out node tries to come back
 
 
 @dataclass(frozen=True)

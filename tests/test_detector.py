@@ -91,3 +91,35 @@ def test_fault_injector_schedule():
     assert [e.node for e in inj.due(3)] == [1, 2]
     assert [e.node for e in inj.due(7)] == [0]
     assert inj.due(4) == []
+
+
+# -- the epoch guard: a repaired-out node cannot resurrect itself -----------
+
+def test_stale_register_cannot_resurrect_failed_node():
+    """Regression: a flapping node's re-registration (its heartbeat stream
+    restarting after the repair removed it) must be refused unless it
+    carries a topology epoch newer than the one its death was confirmed
+    in — otherwise the detector diverges from the topology (the
+    zombie-member bug the transient_flap chaos preset exercises)."""
+    d = HeartbeatDetector(timeout=5.0)
+    d.register(3, 0.0, epoch=1)
+    d.confirm_failed(3, epoch=2)                # repaired out at epoch 2
+    assert not d.register(3, 10.0)              # no epoch: stale by default
+    assert not d.register(3, 10.0, epoch=1)     # pre-death epoch
+    assert not d.register(3, 10.0, epoch=2)     # the death epoch itself
+    assert d.states[3] is NodeState.FAILED
+    d.beat(3, 11.0)                             # beats never resurrect either
+    assert d.states[3] is NodeState.FAILED
+    # a genuinely new incarnation (newer epoch) is allowed back in
+    assert d.register(3, 12.0, epoch=3)
+    assert d.states[3] is NodeState.HEALTHY
+
+
+def test_register_tracks_monotone_epochs():
+    d = HeartbeatDetector(timeout=5.0)
+    assert d.register(0, 0.0, epoch=4)
+    assert d.register(0, 1.0, epoch=2)          # healthy: re-register ok...
+    assert d.epochs[0] == 4                     # ...but epochs never regress
+    d.confirm_failed(0)                         # no epoch given: keeps 4
+    assert not d.register(0, 2.0, epoch=4)
+    assert d.register(0, 3.0, epoch=5)
