@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint docs bench-quick bench bench-json mpi-demo chaos-demo install-dev
+.PHONY: test lint docs bench-quick bench bench-json mpi-demo chaos-demo serve-demo install-dev
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,13 +18,13 @@ docs:
 
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + Eq. 3/4
 # + N-level scoped-repair scaling + MPI-facade transparency overhead
-# + the correlated-failure invariant matrix
+# + the correlated-failure invariant matrix + the serving load curve
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling interposition chaos
+	$(PYTHON) -m benchmarks.run fig10 optimal_k hierarchy_scaling interposition chaos serve
 
-# same smoke, plus machine-readable results in BENCH_PR6.json (CI artifact)
+# same smoke, plus machine-readable results in BENCH_PR7.json (CI artifact)
 bench-json:
-	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling interposition chaos
+	$(PYTHON) -m benchmarks.run --json fig10 optimal_k hierarchy_scaling interposition chaos serve
 
 # the transparency claim, live: an unmodified MPI-shaped loop surviving faults
 mpi-demo:
@@ -33,6 +33,10 @@ mpi-demo:
 # two chaos presets end-to-end, narrated (CI's fault-pipeline smoke test)
 chaos-demo:
 	$(PYTHON) examples/chaos_campaign.py --preset rack_outage --preset transient_flap
+
+# continuous batching vs the lock-step barrier, narrated (CI serving smoke)
+serve-demo:
+	$(PYTHON) examples/continuous_serving.py
 
 bench:
 	$(PYTHON) -m benchmarks.run

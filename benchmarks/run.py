@@ -4,10 +4,10 @@
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
   PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
                                                      # + machine-readable
-                                                     #   BENCH_PR6.json
+                                                     #   BENCH_PR7.json
 
 ``--json`` records per-suite status/wall-seconds (and whatever dict a
-suite's ``main()`` returns) to ``BENCH_PR6.json`` — the CI artifact. The
+suite's ``main()`` returns) to ``BENCH_PR7.json`` — the CI artifact. The
 asserts inside the suites stay structural (the bench-smoke convention);
 the JSON is for dashboards, not pass/fail.
 """
@@ -30,7 +30,8 @@ SUITES = [
     ("eq3_4_optimal_k", "benchmarks.optimal_k", "Eq. 3/4"),
     ("hierarchy_scaling", "benchmarks.hierarchy_scaling", "§V scalability"),
     ("repair_recompile", "benchmarks.repair_recompile", "beyond-paper"),
-    ("serve_latency", "benchmarks.serve_latency", "beyond-paper"),
+    ("serve_latency", "benchmarks.serve_latency",
+     "beyond-paper load curve"),
     ("interposition_overhead", "benchmarks.interposition_overhead",
      "§VI transparency overhead"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
@@ -38,7 +39,7 @@ SUITES = [
      "§III-V fault-model zoo"),
 ]
 
-JSON_PATH = "BENCH_PR6.json"
+JSON_PATH = "BENCH_PR7.json"
 
 
 def main() -> int:

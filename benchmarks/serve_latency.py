@@ -1,119 +1,229 @@
-"""Serving under faults: latency percentiles + goodput, shrink vs
-substitute vs non-blocking substitute (beyond-paper; repro.serve).
+"""Load-curve serving benchmark: continuous batching vs the lock-step
+barrier under a fault storm (beyond-paper; repro.serve).
 
-A 16-node cluster serves a streaming campaign (fixed arrivals per round)
-while three nodes die mid-flight. Per recovery mode:
+Two parts, all pass/fail asserts structural (simulated-clock seconds, never
+wall time, per repo convention):
 
-  * p50/p99 round-latency (deterministic — latency is measured in rounds,
-    not wall seconds, so the numbers are structural, per repo convention);
-  * goodput (completed requests per round) and time-to-drain;
-  * the at-least-once/exactly-once ledger: redeliveries, duplicates
-    suppressed, lost (must be zero);
-  * stall accounting on healthy legions during the repair rounds — the
-    non-blocking claim measured directly.
+**Fault storm at scale** — n=4096, depth-3 topology (256 legions of 16
+under 16 top-level subtrees), ``rack_outage`` kills two racks mid-campaign
+while a seeded open-loop traffic stream (Poisson + diurnal swell + a burst
+window, three SLO classes over a two-million-user population) keeps
+arriving. The *identical* pre-generated arrival schedule is fed to both
+engines — same offered load, no closed-loop mercy:
 
-Shrink serves the whole campaign on degraded capacity after the faults;
-substitution restores capacity and the queue drains faster — the serving
-analogue of the post-repair-throughput trade in benchmarks/repair_time.py.
+  * continuous batching: per-legion in-flight windows, slack-ordered
+    admission, decode-state migration off the dead racks;
+  * lock-step baseline: one batch per node per round, the round's sim
+    duration stretches to the slowest in-flight batch, faults restart
+    their requests from prefill.
+
+Pass bar: exactly-once ledger conserved in both modes (zero lost, zero
+double-completions), zero starved rounds on healthy legions, migrations
+actually exercised, and continuous p99 (sim-seconds) strictly better than
+lock-step at the same offered load.
+
+**Load curve** — n=64 swept across offered rates with SLO-feasibility
+admission control (``serve_admission=shed``): goodput, p99/p999, SLO
+attainment, and shed counts per rate. Backpressure must engage before
+queues blow past deadline feasibility: zero sheds while the load is
+feasible, sheds > 0 once offered load clears capacity.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core import FaultInjector, LegioPolicy, VirtualCluster
-from repro.serve import RECOVERY_PRESETS, Request, ServeEngine, recovery_preset
+from repro.core import LegioPolicy, VirtualCluster
+from repro.core.faultmodel import FaultModel
+from repro.serve import (
+    Burst,
+    Request,
+    ServeEngine,
+    TrafficGenerator,
+    recovery_preset,
+)
 
-N_NODES = 16
-ARRIVALS_PER_ROUND = 40
-ARRIVAL_ROUNDS = 10
-FAULTS = [(2, 1), (3, 5), (4, 9)]          # three workers die mid-flight
-MICROBATCH = 2
+# -- fault storm -------------------------------------------------------------
+
+STORM_NODES = 4096
+STORM_SEED = 11
+STORM_RATE = 600.0            # arrivals per simulated second
+STORM_T_END = 24.0            # arrival window (sim seconds)
+STORM_ROUND_CAP = 600
 
 
-def work(node: int, batch: list[Request], step: int) -> dict[int, float]:
-    return {r.rid: float(np.cos(r.rid)) for r in batch}
+def work(node: int, batch: list[Request], step: int) -> dict[int, int]:
+    return {r.rid: r.rid for r in batch}
 
 
-def run_campaign(mode: str) -> dict:
-    policy = LegioPolicy(legion_size=4, serve_microbatch=MICROBATCH,
-                         **recovery_preset(mode))
-    cluster = VirtualCluster(N_NODES, policy=policy,
-                             injector=FaultInjector.at(FAULTS))
-    engine = ServeEngine(cluster, work)
+def arrival_schedule(t_end: float) -> list[tuple[float, object]]:
+    """Pre-generate the full open-loop stream on a 1-second grid, so both
+    engines see the byte-identical offered load regardless of how their
+    round durations slice time."""
+    gen = TrafficGenerator(
+        STORM_RATE, seed=STORM_SEED, diurnal_amplitude=0.3,
+        diurnal_period=48.0, bursts=(Burst(6.0, 10.0, 2.0),))
+    sched: list[tuple[float, object]] = []
+    t = 0.0
+    while t < t_end:
+        for a in gen.arrivals(t, t + 1.0):
+            sched.append((t + 1.0, a))
+        t += 1.0
+    return sched
 
-    submitted = 0
+
+def run_storm(mode: str, sched: list[tuple[float, object]]) -> dict:
+    continuous = mode == "continuous"
+    policy = LegioPolicy(
+        legion_size=16, hierarchy_depth=3, serve_microbatch=2,
+        serve_window=2, **recovery_preset("nonblocking", spare_fraction=0.02))
+    cluster = VirtualCluster(
+        STORM_NODES, policy=policy,
+        injector=FaultModel(seed=STORM_SEED).campaign(
+            "rack_outage", STORM_NODES, at_step=3, racks=2).injector())
+    engine = ServeEngine(cluster, work, continuous=continuous)
+
+    fault_legions = {cluster.topo.home[e.node]
+                     for e in cluster.injector.events
+                     if e.node in cluster.topo.home}
+    i = 0
     rounds = 0
-    while submitted < ARRIVALS_PER_ROUND * ARRIVAL_ROUNDS or engine.pending:
-        if rounds < ARRIVAL_ROUNDS:
-            engine.submit(ARRIVALS_PER_ROUND)
-            submitted += ARRIVALS_PER_ROUND
+    while rounds < STORM_ROUND_CAP:
+        now = cluster.clock.sim_seconds
+        while i < len(sched) and sched[i][0] <= now:
+            j = i
+            while j < len(sched) and sched[j][0] <= now:
+                j += 1
+            engine.submit([a for _, a in sched[i:j]])
+            i = j
+        if i >= len(sched) and not engine.pending:
+            break
         engine.run_round()
         rounds += 1
-        if rounds > 200:
-            break
-    m = engine.metrics.summary(rounds)
+    m = engine.metrics.summary(max(rounds, 1))
 
-    fault_steps = [s for s, _ in FAULTS]
-    fault_legions = {cluster.topo.home[v] for _, v in FAULTS}
     healthy = [lg.index for lg in cluster.topo.legions
                if lg.members and lg.index not in fault_legions]
-    healthy_stalls = sum(
-        engine.metrics.stalled_rounds(lg, min(fault_steps), max(fault_steps))
-        for lg in healthy)
+    healthy_starved = sum(engine.metrics.starved_rounds(lg) for lg in healthy)
+    submitted = len(sched)
+    accounted = (len(engine.completed) + m["parked"] + m["abandoned"]
+                 + m["shed"] + engine.pending)
     return {
         "mode": mode,
         "submitted": submitted,
-        "completed": len(engine.completed),
-        "lost": submitted - len(engine.completed),
+        "completed": m["completed"],
+        "lost": submitted - accounted,
+        "unserved": engine.pending,
         "requeues": m["requeues"],
         "duplicates_suppressed": m["duplicates_suppressed"],
-        "rounds_to_drain": rounds,
-        "p50_latency_rounds": m["p50_latency_rounds"],
-        "p99_latency_rounds": m["p99_latency_rounds"],
-        "p99_healthy_legions": engine.metrics.latency_percentile(
-            99, set(healthy)),
-        "goodput_rps": round(m["goodput_rps"], 2),
-        "healthy_stall_rounds": healthy_stalls,
-        "survivor_capacity": len(cluster.live_nodes) / N_NODES,
-        "completed_ids_unique": len(set(engine.completed)) == submitted,
+        "migrations": m["migrations"],
+        "decode_ticks_preserved": m["decode_ticks_preserved"],
+        "prefill_ticks": m["prefill_ticks"],
+        "decode_ticks": m["decode_ticks"],
+        "rounds": rounds,
+        "sim_seconds": round(cluster.clock.sim_seconds, 3),
+        "p50_latency_sim": m["p50_latency_sim"],
+        "p99_latency_sim": m["p99_latency_sim"],
+        "p999_latency_sim": m["p999_latency_sim"],
+        "goodput_rps_sim": round(engine.metrics.goodput_sim(
+            cluster.clock.sim_seconds), 2),
+        "starved_rounds_healthy": healthy_starved,
+        "starved_rounds_total": m["starved_rounds"],
+        "completed_ids_unique":
+            len(set(engine.completed)) == len(engine.completed)
+            and len(engine.metrics.completions) == len(engine.completed),
+    }
+
+
+# -- load curve --------------------------------------------------------------
+
+CURVE_NODES = 64
+CURVE_RATES = (2.0, 8.0, 160.0)    # arrivals/sim-second: idle, busy, swamped
+CURVE_T_END = 30.0
+
+
+def run_curve_point(rate: float) -> dict:
+    policy = LegioPolicy(
+        legion_size=8, serve_microbatch=2, serve_window=2,
+        serve_admission="shed", serve_admission_slack=1.0,
+        **recovery_preset("shrink"))
+    cluster = VirtualCluster(CURVE_NODES, policy=policy)
+    engine = ServeEngine(cluster, work)
+    gen = TrafficGenerator(rate, seed=STORM_SEED + int(rate))
+    t_prev = 0.0
+    rounds = 0
+    while rounds < 400:
+        now = cluster.clock.sim_seconds
+        if now < CURVE_T_END:
+            engine.submit(gen.arrivals(t_prev, now) if now > t_prev else [])
+            t_prev = now
+        elif not engine.pending:
+            break
+        engine.run_round()
+        rounds += 1
+    m = engine.metrics.summary(max(rounds, 1))
+    submitted = gen.generated
+    accounted = (m["completed"] + m["parked"] + m["abandoned"] + m["shed"]
+                 + engine.pending)
+    return {
+        "offered_rps": rate,
+        "submitted": submitted,
+        "completed": m["completed"],
+        "shed": m["shed"],
+        "lost": submitted - accounted,
+        "p99_latency_sim": m["p99_latency_sim"],
+        "p999_latency_sim": m["p999_latency_sim"],
+        "slo_attainment": m["slo_attainment"],
+        "goodput_rps_sim": round(engine.metrics.goodput_sim(
+            cluster.clock.sim_seconds), 2),
     }
 
 
 def main() -> None:
-    rows = [run_campaign(mode) for mode in RECOVERY_PRESETS]
-    emit(rows, "serve_latency: fault campaign, shrink vs substitute vs "
-               "nonblocking")
-    by = {r["mode"]: r for r in rows}
+    sched = arrival_schedule(STORM_T_END)
+    storm = [run_storm(mode, sched) for mode in ("continuous", "lockstep")]
+    curve = [run_curve_point(rate) for rate in CURVE_RATES]
+    emit(storm, "serve_latency: continuous batching vs lock-step under a "
+                "rack-outage storm (n=4096 depth 3)")
+    emit(curve, "serve_latency: admission-controlled load curve (n=64)")
+    by = {r["mode"]: r for r in storm}
+    cont, lock = by["continuous"], by["lockstep"]
 
     # -- the acceptance ledger: structural asserts only ----------------------
-    for r in rows:
-        assert r["lost"] == 0, f"{r['mode']}: requests lost"
+    for r in storm:
+        assert r["lost"] == 0 and r["unserved"] == 0, \
+            f"{r['mode']}: exactly-once ledger not conserved"
         assert r["completed_ids_unique"], \
             f"{r['mode']}: a request id completed more than once"
         assert r["requeues"] > 0, \
-            f"{r['mode']}: the fault campaign must force redeliveries"
-        assert r["healthy_stall_rounds"] == 0, \
-            f"{r['mode']}: healthy legions stalled during repair"
-    assert by["substitute"]["survivor_capacity"] > \
-        by["shrink"]["survivor_capacity"], \
-        "substitution must preserve capacity shrink discards"
-    assert by["substitute"]["rounds_to_drain"] <= \
-        by["shrink"]["rounds_to_drain"], \
-        "restored capacity must not drain slower than shrink"
-    assert by["nonblocking"]["p99_latency_rounds"] <= \
-        by["shrink"]["p99_latency_rounds"], \
-        "non-blocking substitution must bound tail latency vs shrink"
+            f"{r['mode']}: the storm must force redeliveries"
+        assert r["starved_rounds_healthy"] == 0, \
+            f"{r['mode']}: healthy legions starved during repair"
+    assert cont["migrations"] > 0, \
+        "continuous mode must migrate decode state off the dead racks"
+    assert cont["decode_ticks_preserved"] > 0, \
+        "migration must actually preserve decode progress"
+    assert cont["p99_latency_sim"] < lock["p99_latency_sim"], \
+        "continuous batching must beat the lock-step barrier at p99"
+    assert cont["goodput_rps_sim"] >= lock["goodput_rps_sim"], \
+        "continuous batching must not lose goodput vs lock-step"
+    for r in curve:
+        assert r["lost"] == 0, f"rate {r['offered_rps']}: requests lost"
+    assert curve[0]["shed"] == 0, \
+        "admission must not shed while the load is feasible"
+    assert curve[-1]["shed"] > 0, \
+        "admission must shed once offered load clears capacity"
 
-    print(f"# fault campaign ({len(FAULTS)} deaths mid-flight, "
-          f"{ARRIVALS_PER_ROUND * ARRIVAL_ROUNDS} requests): zero lost, "
-          f"zero duplicates in every mode")
-    print(f"# p99 latency (rounds): shrink "
-          f"{by['shrink']['p99_latency_rounds']:.0f}, substitute "
-          f"{by['substitute']['p99_latency_rounds']:.0f}, nonblocking "
-          f"{by['nonblocking']['p99_latency_rounds']:.0f}; goodput "
-          f"shrink {by['shrink']['goodput_rps']:.1f} vs nonblocking "
-          f"{by['nonblocking']['goodput_rps']:.1f} req/round")
+    print(f"# storm (n={STORM_NODES}, depth 3, 2 racks out, "
+          f"{storm[0]['submitted']} requests): p99 sim-latency continuous "
+          f"{cont['p99_latency_sim']:.1f}s vs lockstep "
+          f"{lock['p99_latency_sim']:.1f}s; goodput "
+          f"{cont['goodput_rps_sim']:.0f} vs {lock['goodput_rps_sim']:.0f} "
+          f"req/s; {cont['migrations']} decode migrations preserved "
+          f"{cont['decode_ticks_preserved']} ticks")
+    print(f"# load curve (n={CURVE_NODES}, shed admission): "
+          + "; ".join(
+              f"{r['offered_rps']:.0f} rps -> goodput "
+              f"{r['goodput_rps_sim']:.1f}, p99 {r['p99_latency_sim']:.1f}s, "
+              f"shed {r['shed']}" for r in curve))
 
 
 if __name__ == "__main__":

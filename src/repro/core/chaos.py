@@ -400,7 +400,10 @@ class ChaosHarness:
         """Drive a serving workload under the campaign; the per-round
         result gather is the fault trap, and the exactly-once ledger is
         part of the pass bar."""
+        import math as _math
+
         from repro.serve.engine import ServeEngine
+        from repro.serve.traffic import Arrival
 
         campaign = self.model.campaign(scenario, n_nodes, **knobs)
         pol = self._policy_for(recovery)
@@ -424,7 +427,14 @@ class ChaosHarness:
         for step in range(horizon):
             if submitted < total:
                 batch = min(per_round, total - submitted)
-                engine.submit(batch)
+                # alternate payload-less one-tick requests with multi-tick
+                # decode-heavy ones, so decode-state migration is exercised
+                # by every scenario x recovery cell, not just the benchmark
+                engine.submit([
+                    Arrival(user=i, slo_class="batch",
+                            slo_seconds=_math.inf, prefill_ticks=1,
+                            decode_ticks=3) if i % 2 else None
+                    for i in range(batch)])
                 submitted += batch
             self._apply_chaos(campaign, cluster, step, checks, state)
             report = engine.run_round(step)
@@ -437,14 +447,25 @@ class ChaosHarness:
         checks.append(self._one_terminal_action(actions))
         checks.append(self._ledgers_conserved(engine.session))
         accounted = (len(engine.completed) + len(engine.metrics.parked)
-                     + len(engine.metrics.abandoned) + engine.pending)
+                     + len(engine.metrics.abandoned)
+                     + len(engine.metrics.shed) + engine.pending)
         checks.append(InvariantCheck(
             "exactly_once_accounting", accounted == submitted,
             f"{accounted} accounted for, {submitted} submitted "
             f"(completed={len(engine.completed)}, "
             f"parked={len(engine.metrics.parked)}, "
             f"abandoned={len(engine.metrics.abandoned)}, "
+            f"shed={len(engine.metrics.shed)}, "
             f"pending={engine.pending})"))
+        # decode-state migration must never double-complete: one completion
+        # record per client-visible id, migrated or not
+        comp_rids = [r.rid for r in engine.metrics.completions]
+        checks.append(InvariantCheck(
+            "completions_unique", len(comp_rids) == len(set(comp_rids))
+            and len(comp_rids) == len(engine.completed),
+            f"{len(comp_rids)} completion records over "
+            f"{len(set(comp_rids))} unique ids "
+            f"({engine.metrics.migrations} migrations)"))
         self._check_flaps_landed(campaign, state, checks)
         checks.extend(self._scenario_checks(campaign, actions, cluster,
                                             "serve"))
@@ -460,6 +481,9 @@ class ChaosHarness:
                 "requeues": engine.metrics.requeues,
                 "duplicates_suppressed":
                     engine.metrics.duplicates_suppressed,
+                "migrations": engine.metrics.migrations,
+                "decode_ticks_preserved":
+                    engine.metrics.decode_ticks_preserved,
                 "survivors": len(cluster.live_nodes),
             })
 

@@ -116,6 +116,20 @@ class LegioPolicy:
     # in ServeMetrics.parked, never silently dropped).
     serve_microbatch: int = 4
     serve_max_attempts: int = 0
+    # --- continuous batching (repro.serve, PR 7): per-node in-flight window
+    # (micro-batch slots a node works concurrently — admission refills a slot
+    # the tick after its batch completes, per legion, independent of other
+    # legions' progress or in-flight repairs), SLO-aware admission control
+    # ("none" admits everything; "shed" rejects a request at the door when
+    # the target legion's backlog already makes its deadline infeasible —
+    # recorded in ServeMetrics.shed; "park" records it in .parked instead),
+    # and decode-state migration (a request that dies mid-decode keeps its
+    # decode progress on redelivery instead of restarting from prefill).
+    serve_window: int = 1
+    serve_admission: str = "none"        # none | shed | park
+    serve_admission_slack: float = 0.0   # extra headroom (sim s) required
+    serve_slo_seconds: float = 0.0       # default deadline; 0 = no deadline
+    serve_migrate_decode: bool = True
     # --- correlated-failure scenarios (repro.core.faultmodel): knobs the
     # named presets read when generating seeded chaos campaigns.
     chaos_fault_fraction: float = 0.125  # independent: fraction of nodes hit
@@ -141,6 +155,16 @@ class LegioPolicy:
             raise ValueError("serve_microbatch must be positive")
         if self.serve_max_attempts < 0:
             raise ValueError("serve_max_attempts must be >= 0")
+        if self.serve_window < 1:
+            raise ValueError("serve_window must be >= 1")
+        if self.serve_admission not in ("none", "shed", "park"):
+            raise ValueError(
+                "serve_admission must be one of ('none', 'shed', 'park'), "
+                f"got {self.serve_admission!r}")
+        if self.serve_admission_slack < 0:
+            raise ValueError("serve_admission_slack must be >= 0")
+        if self.serve_slo_seconds < 0:
+            raise ValueError("serve_slo_seconds must be >= 0")
         if not 0.0 <= self.chaos_fault_fraction <= 1.0:
             raise ValueError("chaos_fault_fraction must be in [0, 1]")
         if self.chaos_flap_delay_steps < 1:

@@ -40,7 +40,8 @@ class ResilientServer:
 
     def __init__(self, cfg, cluster: "Session", *, prompt_len: int = 32,
                  decode_tokens: int = 8, batch_per_node: int = 4,
-                 requeue: bool = True):
+                 requeue: bool = True, window: int | None = None,
+                 continuous: bool = True):
         self.cfg = cfg
         self.prompt_len = prompt_len
         self.decode_tokens = decode_tokens
@@ -53,6 +54,7 @@ class ResilientServer:
         # that wall-clock noise must not soft-fail healthy nodes as stragglers
         self.engine = ServeEngine(cluster, self._work_fn,
                                   microbatch=batch_per_node, requeue=requeue,
+                                  window=window, continuous=continuous,
                                   observe_stragglers=False)
 
     @property
@@ -92,11 +94,16 @@ class ResilientServer:
         return {
             "completed": rep.completed,
             "abandoned": m["abandoned"],
+            "shed": m["shed"],
             "unserved": self.engine.pending,
             "rounds": rep.rounds,
             "requeues": m["requeues"],
+            "migrations": m["migrations"],
             "p50_latency_rounds": m["p50_latency_rounds"],
             "p99_latency_rounds": m["p99_latency_rounds"],
+            "p99_latency_sim": m["p99_latency_sim"],
+            "slo_attainment": m["slo_attainment"],
+            "starved_rounds": m["starved_rounds"],
             "wall_seconds": wall,
             "survivors": rep.survivors,
             "repairs": rep.repairs,
@@ -119,6 +126,18 @@ def main(argv: list[str] | None = None) -> int:
                     default="shrink", help="recovery strategy for faults")
     ap.add_argument("--no-requeue", action="store_true",
                     help="DROP failed nodes' requests instead of re-queueing")
+    ap.add_argument("--window", type=int, default=None,
+                    help="in-flight micro-batches per node (continuous "
+                         "batching window; default policy.serve_window)")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="use the lock-step barrier baseline instead of "
+                         "continuous batching")
+    ap.add_argument("--slo", type=float, default=0.0,
+                    help="per-request SLO deadline in simulated seconds "
+                         "(0 = no deadlines)")
+    ap.add_argument("--admission", choices=("none", "shed", "park"),
+                    default="none",
+                    help="SLO-feasibility admission control at submit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -128,19 +147,23 @@ def main(argv: list[str] | None = None) -> int:
         pairs.append((int(step), int(node)))
     # batch size flows through the ResilientServer constructor (the engine's
     # explicit microbatch override); the policy only carries recovery setup
-    policy = LegioPolicy(**recovery_preset(args.recovery))
+    policy = LegioPolicy(**recovery_preset(args.recovery),
+                         serve_slo_seconds=args.slo,
+                         serve_admission=args.admission)
     session = Session(
         args.nodes, policy=policy, injector=FaultInjector.at(pairs))
     server = ResilientServer(
         cfg, session, prompt_len=args.prompt_len,
         decode_tokens=args.decode_tokens, batch_per_node=args.batch_per_node,
-        requeue=not args.no_requeue)
+        requeue=not args.no_requeue, window=args.window,
+        continuous=not args.lockstep)
     print(f"[serve] arch={cfg.name} nodes={args.nodes} "
-          f"requests={args.requests} recovery={args.recovery}")
+          f"requests={args.requests} recovery={args.recovery} "
+          f"mode={'lockstep' if args.lockstep else 'continuous'}")
     rep = server.run(args.requests)
     for k, v in rep.items():
         print(f"  {k}: {v if not isinstance(v, float) else round(v, 3)}")
-    ok = rep["completed"] + rep["abandoned"] == args.requests
+    ok = rep["completed"] + rep["abandoned"] + rep["shed"] == args.requests
     print(f"[serve] {'OK' if ok else 'INCOMPLETE'}")
     return 0 if ok else 1
 

@@ -11,6 +11,11 @@ the root directly, so this degenerates to the classic least-loaded-legion
 policy unchanged. After a repair changes a ring, :meth:`reconcile` re-homes
 the queues of legions that left it, so no request is ever stranded on a
 structure that no longer exists.
+
+Selection is fully deterministic: equal loads tie-break on the lowest
+subtree index, then the lowest legion index, and never on dict iteration
+order — two engines fed the same seeded request stream produce
+byte-identical dispatch traces (property-tested in tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -47,39 +52,49 @@ class RequestRouter:
         if orphans:
             self.rerouted += len(orphans)
             for req in orphans:
-                self._route(req, front=True)
+                self.route(req, front=True)
         return orphans
 
-    # -- submission ----------------------------------------------------------
+    # -- selection -----------------------------------------------------------
 
-    def _route(self, req: Request, *, front: bool = False) -> None:
+    def peek(self) -> LegionQueue:
+        """The queue the *next* routed request would land in, without
+        placing anything — admission control estimates feasibility against
+        this target. Ties break (load, index) at both stages."""
         if not self.queues:
             raise RuntimeError("no live legions to route to")
-        # stage 1: least-loaded top-level subtree (ties break on index)
+        # stage 1: least-loaded top-level subtree (ties: lowest subtree idx)
         load: dict[int, int] = {}
         for idx, q in self.queues.items():
             sub = self._subtree.get(idx, idx)
             load[sub] = load.get(sub, 0) + len(q)
         best_sub = min(load, key=lambda s: (load[s], s))
-        # stage 2: least-loaded legion inside the chosen subtree
-        target = min(
+        # stage 2: least-loaded legion inside it (ties: lowest legion idx)
+        return min(
             (q for idx, q in self.queues.items()
              if self._subtree.get(idx, idx) == best_sub),
             key=lambda q: (len(q), q.legion))
+
+    def route(self, req: Request, *, front: bool = False) -> LegionQueue:
+        """Place one request on the current least-loaded target."""
+        target = self.peek()
         (target.push_front if front else target.push)(req)
+        return target
+
+    # -- submission ----------------------------------------------------------
 
     def submit(self, requests: list[Request], view) -> None:
         """Shard new requests across the live legions, least-loaded first."""
         self.reconcile(view)
         for req in requests:
-            self._route(req)
+            self.route(req)
 
     def requeue(self, req: Request, view) -> None:
         """Redeliver a request whose node died mid-batch: front of the
         least-loaded *surviving* legion's queue (its old legion may be the
         one that just shrank — reconcile first)."""
         self.reconcile(view)
-        self._route(req, front=True)
+        self.route(req, front=True)
 
     # -- views ---------------------------------------------------------------
 

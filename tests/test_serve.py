@@ -1,14 +1,22 @@
 """Serve subsystem: at-least-once re-enqueue, exactly-once completion,
-no stall on healthy legions — for every recovery mode."""
+no stall on healthy legions — for every recovery mode; plus the
+continuous-batching surface (phase split, decode migration, slack
+scheduling, admission control, deterministic dispatch)."""
+import math
+
 import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import FaultInjector, LegioPolicy, VirtualCluster
 from repro.serve import (
     RECOVERY_PRESETS as MODES,
+    Arrival,
+    LegionQueue,
+    MicroBatcher,
     Request,
     RequestRouter,
     ServeEngine,
+    TrafficGenerator,
     recovery_preset,
 )
 
@@ -252,3 +260,309 @@ def test_healthy_legions_dispatch_during_repair_round():
         for n in rep.dispatched}
     assert len(dispatched_legions - {victim_legion}) >= 3, \
         "all other legions dispatched in the repair round"
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: multi-tick service, phase split, in-flight windows
+# ---------------------------------------------------------------------------
+
+def arr(prefill=1, decode=0, slo=math.inf, user=0):
+    return Arrival(user=user, slo_class="standard", slo_seconds=slo,
+                   prefill_ticks=prefill, decode_ticks=decode)
+
+
+def test_multi_tick_service_spans_rounds_with_phase_accounting():
+    """A prefill-2/decode-3 request occupies its slot for five ticks, then
+    completes; every tick lands in the right phase bucket."""
+    eng = make_engine(n=4, microbatch=1)
+    eng.submit([arr(prefill=2, decode=3)])
+    for _ in range(4):
+        eng.run_round()
+        assert not eng.completed, "5 ticks of service cannot finish in 4"
+    eng.run_round()
+    assert sorted(eng.completed) == [0]
+    assert eng.metrics.phase_ticks == {"prefill": 2, "decode": 3}
+    rec = eng.metrics.completions[0]
+    assert rec.latency_sim == pytest.approx(
+        5 * eng.cluster.policy.step_sim_seconds)
+
+
+def test_window_admits_while_previous_batch_still_decoding():
+    """With window=2 a node takes a second micro-batch while its first is
+    mid-decode — the in-flight window replaces the round barrier."""
+    eng = make_engine(n=4, microbatch=1, window=2)
+    eng.submit([arr(decode=6), arr(decode=6)])
+    eng.run_round()
+    inflight = {n: len(b) for n, b in eng._inflight.items()}
+    assert sum(inflight.values()) == 2, "both admitted before either done"
+
+
+def test_default_specs_match_legacy_single_round_completion():
+    """Payload-less submits (1 prefill tick, 0 decode) complete in the
+    round they are dispatched — byte-compatible with the pre-window
+    engine."""
+    eng = make_engine()
+    eng.submit(9)
+    rep = eng.run_round()
+    assert rep.completed_now == 9
+    assert eng.metrics.phase_ticks == {"prefill": 9, "decode": 0}
+
+
+def test_round_seconds_records_sim_and_wall():
+    """Every round records its duration on both clocks: the simulated one
+    (deterministic — one tick per continuous round) and perf_counter."""
+    eng = make_engine(n=8)
+    eng.submit(12)
+    eng.serve(max_rounds=10)
+    tick = eng.cluster.policy.step_sim_seconds
+    assert eng.metrics.round_seconds, "rounds must be recorded"
+    for row in eng.metrics.round_seconds.values():
+        assert row["sim"] == pytest.approx(tick)
+        assert row["wall"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# decode-state migration: progress survives the node, never double-completes
+# ---------------------------------------------------------------------------
+
+def test_migration_preserves_decode_progress():
+    """A request mid-decode on a dying node re-enters a queue with its
+    decode progress intact: total decode ticks spent equal the spec, with
+    the preserved ticks never re-spent."""
+    eng = make_engine(n=16, mode="nonblocking", microbatch=1,
+                      faults=[(3, 0)])
+    eng.submit([arr(decode=8)])         # lands on legion 0 / node 0
+    eng.serve(max_rounds=40)
+    assert sorted(eng.completed) == [0]
+    assert eng.metrics.migrations == 1
+    assert eng.metrics.decode_ticks_preserved >= 1
+    # preserved ticks were not re-executed: spend equals the spec exactly
+    assert eng.metrics.phase_ticks["decode"] == 8
+    assert len(eng.metrics.completions) == 1
+    assert eng.metrics.completions[0].migrated
+
+
+def test_migration_disabled_restarts_from_prefill():
+    """serve_migrate_decode=False is the restart baseline: same fault,
+    zero migrations, and the decode ticks before the fault are re-spent."""
+    pol = LegioPolicy(legion_size=4, serve_microbatch=1,
+                      serve_migrate_decode=False,
+                      **recovery_preset("nonblocking", spare_fraction=0.5))
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at([(3, 0)]))
+    eng = ServeEngine(cl, work)
+    eng.submit([arr(decode=8)])
+    eng.serve(max_rounds=40)
+    assert sorted(eng.completed) == [0]
+    assert eng.metrics.migrations == 0
+    assert eng.metrics.phase_ticks["decode"] > 8, \
+        "restart must re-spend the pre-fault decode ticks"
+    assert len(eng.metrics.completions) == 1
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_migration_never_double_completes_under_faults(mode):
+    """Decode-heavy traffic + mid-campaign faults in every recovery mode:
+    exactly one completion per id, migrated or not."""
+    eng = make_engine(n=16, mode=mode, microbatch=2,
+                      faults=[(2, 1), (3, 5)])
+    eng.submit([arr(decode=4, user=i) for i in range(60)])
+    eng.serve(max_rounds=120)
+    assert sorted(eng.completed) == list(range(60))
+    rids = [r.rid for r in eng.metrics.completions]
+    assert len(rids) == len(set(rids)) == 60
+    assert eng.metrics.starved_rounds() == 0
+
+
+# ---------------------------------------------------------------------------
+# lock-step baseline: the barrier stretches rounds; continuous beats it
+# ---------------------------------------------------------------------------
+
+def test_lockstep_round_stretches_to_slowest_batch():
+    eng = make_engine(n=4, microbatch=1, continuous=False)
+    eng.submit([arr(decode=5), arr(decode=0)])
+    rep = eng.run_round()
+    tick = eng.cluster.policy.step_sim_seconds
+    assert rep.completed_now == 2, "lock-step drains everything per round"
+    assert rep.sim_seconds == pytest.approx(6 * tick), \
+        "the round lasts as long as its slowest batch (1+5 ticks)"
+
+
+def test_continuous_beats_lockstep_p99_at_same_offered_load():
+    """The tentpole claim in miniature: identical arrival schedule, same
+    faults — continuous batching's p99 (sim-seconds) is strictly better
+    than the lock-step barrier's."""
+    gen = TrafficGenerator(8.0, seed=3)
+    sched = []
+    for t in range(12):
+        sched.extend((float(t + 1), a)
+                     for a in gen.arrivals(float(t), float(t + 1)))
+    p99 = {}
+    for continuous in (True, False):
+        eng = make_engine(n=16, mode="nonblocking", microbatch=2,
+                          faults=[(3, 5)], continuous=continuous)
+        i, rounds = 0, 0
+        while rounds < 200:
+            now = eng.cluster.clock.sim_seconds
+            while i < len(sched) and sched[i][0] <= now:
+                j = i
+                while j < len(sched) and sched[j][0] <= now:
+                    j += 1
+                eng.submit([a for _, a in sched[i:j]])
+                i = j
+            if i >= len(sched) and not eng.pending:
+                break
+            eng.run_round()
+            rounds += 1
+        assert len(eng.completed) == len(sched)
+        p99[continuous] = eng.metrics.latency_percentile(99, unit="sim")
+    assert p99[True] < p99[False]
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware scheduling: slack orders the batch, FIFO is preserved
+# ---------------------------------------------------------------------------
+
+def test_batcher_picks_tightest_slack_first():
+    q = LegionQueue(legion=0)
+    loose = Request(rid=0, deadline_sim=100.0, decode_ticks=1)
+    none = Request(rid=1)                          # no deadline: inf slack
+    tight = Request(rid=2, deadline_sim=10.0, decode_ticks=1)
+    for r in (loose, none, tight):
+        q.push(r)
+    batch = MicroBatcher(2).form_one(q, now=0.0, tick_seconds=1.0)
+    assert [r.rid for r in batch] == [2, 0], "tightest deadline leaves first"
+    assert [r.rid for r in q._q] == [1]
+
+
+def test_batcher_stays_fifo_without_deadlines():
+    q = LegionQueue(legion=0)
+    for i in range(5):
+        q.push(Request(rid=i))
+    assert [r.rid for r in MicroBatcher(3).form_one(q)] == [0, 1, 2]
+
+
+def test_equal_slack_keeps_queue_order():
+    """Front-pushed redeliveries retain priority among equal slack — the
+    tie-break is queue position, never rid or dict order."""
+    q = LegionQueue(legion=0)
+    a = Request(rid=5, deadline_sim=20.0)
+    b = Request(rid=1, deadline_sim=20.0)
+    q.push(a)
+    q.push_front(b)                                # redelivery: skip the line
+    batch = q.pop_batch(2, key=lambda r: r.slack(0.0, 1.0))
+    assert [r.rid for r in batch] == [1, 5]
+
+
+# ---------------------------------------------------------------------------
+# admission control: backpressure before the queues blow past feasibility
+# ---------------------------------------------------------------------------
+
+def test_admission_shed_rejects_infeasible_load():
+    """A flood of tight-deadline arrivals on a tiny cluster: admission
+    sheds what cannot meet its SLO, the ledger stays conserved, and
+    nothing shed ever completes."""
+    pol = LegioPolicy(legion_size=4, serve_microbatch=1,
+                      serve_admission="shed")
+    eng = ServeEngine(VirtualCluster(4, policy=pol), work)
+    eng.submit([arr(decode=3, slo=6.0, user=i) for i in range(200)])
+    eng.serve(max_rounds=300)
+    shed = set(eng.metrics.shed)
+    assert shed, "infeasible load must be shed at the door"
+    assert not shed & set(eng.completed)
+    assert shed | set(eng.completed) == set(range(200))
+
+
+def test_admission_park_keeps_ids_out_of_completions():
+    pol = LegioPolicy(legion_size=4, serve_microbatch=1,
+                      serve_admission="park")
+    eng = ServeEngine(VirtualCluster(4, policy=pol), work)
+    eng.submit([arr(decode=3, slo=6.0, user=i) for i in range(200)])
+    eng.serve(max_rounds=300)
+    parked = set(eng.metrics.parked)
+    assert parked and not parked & set(eng.completed)
+    assert len(eng.metrics.shed) == 0
+    assert parked | set(eng.completed) == set(range(200))
+
+
+def test_admission_none_queues_everything():
+    eng = make_engine(n=8)
+    eng.submit([arr(decode=3, slo=0.5, user=i) for i in range(50)])
+    assert eng.router.backlog + sum(
+        len(b) for b in eng._inflight.values()) == 50
+    assert not eng.metrics.shed and not eng.metrics.parked
+
+
+# ---------------------------------------------------------------------------
+# parking + DROP semantics across every recovery mode (ledger coverage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_parking_path_across_modes(mode):
+    """serve_max_attempts=1 with a mid-campaign fault: everything the dead
+    node held parks (never silently lost, never completed twice)."""
+    pol = LegioPolicy(legion_size=4, serve_microbatch=3,
+                      serve_max_attempts=1,
+                      **recovery_preset(mode, spare_fraction=0.5))
+    cl = VirtualCluster(16, policy=pol, injector=FaultInjector.at([(0, 5)]))
+    eng = ServeEngine(cl, work)
+    eng.submit(48)
+    eng.serve(max_rounds=60)
+    parked = set(eng.metrics.parked)
+    assert parked, f"{mode}: the dead node's requests must park"
+    assert not parked & set(eng.completed)
+    assert parked | set(eng.completed) == set(range(48))
+    assert not eng.metrics.abandoned
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_drop_semantics_across_modes(mode):
+    """requeue=False in every recovery mode: the dead node's requests are
+    abandoned explicitly — counted, disjoint from completions, and the
+    ledger still adds up."""
+    eng = make_engine(mode=mode, faults=[(0, 2)], requeue=False)
+    eng.submit(48)
+    rep = eng.serve(max_rounds=60)
+    m = rep.metrics_summary
+    assert m["abandoned"] > 0 and m["requeues"] == 0, \
+        f"{mode}: DROP must abandon, not requeue"
+    abandoned = set(eng.metrics.abandoned)
+    assert not abandoned & set(eng.completed)
+    assert abandoned | set(eng.completed) == set(range(48))
+
+
+# ---------------------------------------------------------------------------
+# determinism: identical seeds -> byte-identical dispatch traces
+# ---------------------------------------------------------------------------
+
+def _dispatch_trace(seed):
+    gen = TrafficGenerator(6.0, seed=seed)
+    eng = make_engine(n=16, mode="nonblocking", microbatch=2,
+                      faults=[(2, 5)])
+    t_prev = 0.0
+    for _ in range(25):
+        now = eng.cluster.clock.sim_seconds
+        if now > t_prev:
+            eng.submit(gen.arrivals(t_prev, now))
+            t_prev = now
+        if t_prev >= 12.0 and not eng.pending:
+            break
+        eng.run_round()
+    return (eng.metrics.dispatch_trace,
+            [r.rid for r in eng.metrics.completions],
+            [(r.rid, r.complete_sim) for r in eng.metrics.completions])
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dispatch_trace_byte_identical_across_runs(seed):
+    """The tie-break property: at a fixed seed, two independent runs over
+    the same traffic produce identical dispatch traces and identical
+    completion orders — no dict-order or hash-seed dependence anywhere in
+    router selection, slack scheduling, or window admission."""
+    assert _dispatch_trace(seed) == _dispatch_trace(seed)
+
+
+def test_dispatch_trace_deterministic_fixed_seed():
+    """Deterministic coverage of the same property (runs without
+    hypothesis)."""
+    for seed in (0, 7, 123457):
+        assert _dispatch_trace(seed) == _dispatch_trace(seed)
