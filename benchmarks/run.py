@@ -25,6 +25,8 @@ SUITES = [
     ("fig5_6_msgsize", "benchmarks.collective_msgsize", "Fig. 5/6"),
     ("fig7_8_9_netsize", "benchmarks.collective_netsize", "Fig. 7/8/9"),
     ("fig10_repair", "benchmarks.repair_time", "Fig. 10"),
+    ("repair_overlap", "benchmarks.repair_overlap",
+     "beyond-paper background repair"),
     ("fig11_nas_ep", "benchmarks.app_ep", "Fig. 11"),
     ("fig12_docking", "benchmarks.app_docking", "Fig. 12"),
     ("eq3_4_optimal_k", "benchmarks.optimal_k", "Eq. 3/4"),
@@ -39,7 +41,7 @@ SUITES = [
      "§III-V fault-model zoo"),
 ]
 
-JSON_PATH = "BENCH_PR7.json"
+JSON_PATH = "BENCH_PR8.json"
 
 
 def main() -> int:

@@ -31,8 +31,13 @@ the run (every ``InvariantCheck`` must hold):
     never spill past the primary's scope.
 
 Recovery setups reuse the serving presets (shrink / substitute /
-nonblocking — ``repro.serve.engine.recovery_preset``), so the chaos
-matrix and the serving benchmarks judge the same configurations.
+nonblocking / overlap — ``repro.serve.engine.recovery_preset``), so the
+chaos matrix and the serving benchmarks judge the same configurations.
+The overlap column (background revoke-then-repair) adds its own invariant:
+**zero healthy-subtree sim-clock charge during a disjoint-scope repair** —
+``ClusterClock.residual_seconds`` stays 0.0 for the whole campaign, i.e.
+every overlapped repair window hid entirely behind the healthy subtrees'
+own compute and nobody ever waited on a remote scope's recovery.
 """
 from __future__ import annotations
 
@@ -47,7 +52,7 @@ from repro.core.types import ChaosAction, FaultSource, NodeState, RecoveryAction
 __all__ = ["ChaosHarness", "ChaosReport", "InvariantCheck",
            "check_topology_coherence"]
 
-RECOVERIES = ("shrink", "substitute", "nonblocking")
+RECOVERIES = ("shrink", "substitute", "nonblocking", "overlap")
 
 # synthetic latency fed for a SLOWDOWN target: the straggler detector's
 # min_latency floor times the event factor — above the floor and far above
@@ -68,7 +73,7 @@ class ChaosReport:
 
     scenario: str
     workload: str                        # train | serve
-    recovery: str                        # shrink | substitute | nonblocking
+    recovery: str            # shrink | substitute | nonblocking | overlap
     seed: int
     n_nodes: int
     checks: list[InvariantCheck] = field(default_factory=list)
@@ -242,6 +247,33 @@ class ChaosHarness:
             "message_ledgers_conserved", not bad,
             f"posted != delivered+discarded+pending on {bad[:2]}")
 
+    @staticmethod
+    def _overlap_checks(recovery: str, cluster: VirtualCluster,
+                        actions: list[RecoveryAction]
+                        ) -> list[InvariantCheck]:
+        """Overlap-column invariants: every repair actually deferred its
+        charge to a background window, and no healthy subtree was ever
+        charged for a disjoint scope's repair (zero residual wait — the
+        windows all hid behind the workload's own sim-clock progress)."""
+        if recovery != "overlap":
+            return []
+        clock = cluster.clock
+        blocking = [a for a in actions
+                    if a.report is not None and not a.overlapped]
+        return [
+            InvariantCheck(
+                "repairs_ran_overlapped", not blocking,
+                f"{len(blocking)} repair(s) charged synchronously under "
+                f"the overlap preset (steps "
+                f"{sorted({a.step for a in blocking})[:4]})"),
+            InvariantCheck(
+                "healthy_subtree_clock_unaffected",
+                clock.residual_seconds == 0.0,
+                f"{clock.residual_seconds:.4f} sim-s of repair residual "
+                f"charged to the clock during disjoint-scope repairs "
+                f"(hidden={clock.hidden_seconds:.4f})"),
+        ]
+
     def _scenario_checks(self, campaign: FaultCampaign,
                          actions: list[RecoveryAction],
                          cluster: VirtualCluster,
@@ -381,6 +413,7 @@ class ChaosHarness:
         self._check_flaps_landed(campaign, state, checks)
         checks.extend(self._scenario_checks(campaign, actions, cluster,
                                             "train"))
+        checks.extend(self._overlap_checks(recovery, cluster, actions))
         return ChaosReport(
             scenario=scenario, workload="train", recovery=recovery,
             seed=self.seed, n_nodes=n_nodes, checks=checks,
@@ -392,6 +425,8 @@ class ChaosHarness:
                 "repairs": len(cluster.repairs),
                 "survivors": len(cluster.live_nodes),
                 "sim_seconds": round(cluster.clock.sim_seconds, 6),
+                "hidden_seconds": round(cluster.clock.hidden_seconds, 6),
+                "residual_seconds": round(cluster.clock.residual_seconds, 6),
             })
 
     def run_serve(self, scenario: str, n_nodes: int,
@@ -469,6 +504,7 @@ class ChaosHarness:
         self._check_flaps_landed(campaign, state, checks)
         checks.extend(self._scenario_checks(campaign, actions, cluster,
                                             "serve"))
+        checks.extend(self._overlap_checks(recovery, cluster, actions))
         return ChaosReport(
             scenario=scenario, workload="serve", recovery=recovery,
             seed=self.seed, n_nodes=n_nodes, checks=checks,
@@ -485,6 +521,8 @@ class ChaosHarness:
                 "decode_ticks_preserved":
                     engine.metrics.decode_ticks_preserved,
                 "survivors": len(cluster.live_nodes),
+                "hidden_seconds": round(cluster.clock.hidden_seconds, 6),
+                "residual_seconds": round(cluster.clock.residual_seconds, 6),
             })
 
     # -- the matrix ----------------------------------------------------------

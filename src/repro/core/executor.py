@@ -55,6 +55,7 @@ from repro.core.substitute import (
     restore_for_substitute,
 )
 from repro.core.types import (
+    BackgroundRepair,
     ClusterClock,
     FailureEvent,
     FaultSource,
@@ -83,6 +84,9 @@ class StepReport:
     grad_scale: float = 1.0
     expanded: tuple[tuple[int, int], ...] = ()  # non-blocking splices applied
     respawned: tuple[int, ...] = ()          # provisioner deliveries this step
+    repairing: tuple[int, ...] = ()          # survivors busy in an overlap
+                                             # window (excluded this step)
+    reconciled: tuple[RepairScope, ...] = () # windows merged at the boundary
 
 
 class VirtualCluster:
@@ -122,6 +126,7 @@ class VirtualCluster:
         self.backlog: list[UnfilledSlot] = []    # shrunk slots awaiting refill
         self.pending: list[PendingSubstitution] = []
         self.pipeline = FaultPipeline(self)
+        self.background: list[BackgroundRepair] = []  # in-flight overlap windows
         self.checkpointer = checkpointer
         self.restored_state: dict[int, Any] = {}  # this step's splices only
         self._restored_step = -1
@@ -240,8 +245,20 @@ class VirtualCluster:
         concurrent repairs) never wait on an unrelated subtree's recovery
         (Bouteiller & Bosilca's non-blocking argument applied across
         subtrees). Bookkeeping per scope is identical to :meth:`repair`.
+
+        Under ``policy.repair_overlap`` (revoke-then-repair) even the max
+        is not charged synchronously: each scope's cost opens a
+        :class:`BackgroundRepair` window on the simulated clock instead —
+        the scope's survivors stay busy (schedules exclude them) until the
+        clock, advanced by the healthy subtrees' own compute, passes
+        ``finish_sim``; :meth:`reconcile_repairs` then merges the window
+        with zero residual. A new scope whose participants or verdict
+        touch an in-flight window serializes *behind* it (its window
+        starts at the earlier window's finish), never observing a
+        half-applied group.
         """
         out: list[tuple[RepairScope, RepairReport]] = []
+        overlap = self.overlap_enabled
         worst = 0.0
         for scope in scopes:
             verdict = set(scope.verdict)
@@ -250,6 +267,9 @@ class VirtualCluster:
             try:
                 report = self.strategy.repair(self, verdict)
             except SparePoolExhausted as exc:
+                # strict-mode exhaustion is the documented overlap-unsafe
+                # case: the fatal error must surface synchronously, so the
+                # committed partial work is charged blocking
                 if exc.partial_report is not None:
                     self._stamp_scope(exc.partial_report, scope)
                     self._commit_repair(verdict, exc.partial_report,
@@ -261,12 +281,81 @@ class VirtualCluster:
                 raise
             self._stamp_scope(report, scope)
             self._commit_repair(verdict, report, charge=False)
-            worst = max(worst, report.model_cost)
+            if overlap:
+                self._open_window(scope, report)
+            else:
+                worst = max(worst, report.model_cost)
             out.append((scope, report))
         if worst:
             self.clock.charge(worst)
             self._refresh_liveness()
         return out
+
+    # -- background (overlapped) repair ---------------------------------------
+
+    @property
+    def overlap_enabled(self) -> bool:
+        """Revoke-then-repair is on iff the policy asks for it AND the
+        registered strategy declares itself overlap-safe."""
+        return (self.policy.repair_overlap
+                and getattr(self.strategy, "overlap_safe", False))
+
+    def _open_window(self, scope: RepairScope,
+                     report: RepairReport) -> None:
+        """Defer a scope's repair charge to a BackgroundRepair window. A
+        window whose participants/verdict touch an in-flight one starts at
+        that window's finish (serialized — busy survivors cannot enter a
+        second repair mid-window); disjoint windows run concurrently."""
+        now = self.clock.sim_seconds
+        involved = set(scope.participants) | set(scope.verdict)
+        start = now
+        for br in self.background:
+            if involved & (set(br.busy) | set(br.scope.verdict)):
+                start = max(start, br.finish_sim)
+        self.background.append(BackgroundRepair(
+            scope=scope, report=report, start_step=self._step,
+            start_sim=start, finish_sim=start + report.model_cost))
+
+    def repairing_participants(self) -> set[int]:
+        """Survivors busy in an in-flight background repair window —
+        excluded from collective schedules and serve admission until
+        :meth:`reconcile_repairs` merges their window."""
+        return {n for br in self.background for n in br.busy}
+
+    def reconcile_repairs(self, *, force: bool = False
+                          ) -> list[BackgroundRepair]:
+        """Merge background repair windows back into full membership —
+        the deferred half of revoke-then-repair, run at every
+        ``Session`` boundary.
+
+        Without ``force`` only windows the clock has already passed merge
+        (zero residual: the whole repair hid behind concurrent compute).
+        With ``force`` (an explicit barrier, a rooted op on a busy root)
+        every window merges *now* and the unhidden remainder is charged
+        as residual wait — the price of synchronizing with a repair that
+        had not finished."""
+        now = self.clock.sim_seconds
+        merged = [br for br in self.background
+                  if force or br.done(now)]
+        if not merged:
+            return []
+        self.background = [br for br in self.background
+                           if br not in merged]
+        # windows merge concurrently: a forced synchronization waits out
+        # the *makespan* (max residual — serialized windows' finish times
+        # already chain), and each window hides only the part of its cost
+        # that actually elapsed behind compute before the merge
+        waited = max(br.residual(now) for br in merged)
+        for br in merged:
+            self.clock.absorb(min(br.report.model_cost,
+                                  max(0.0, now - br.start_sim)))
+        if waited > 0.0:
+            self.clock.wait(waited)
+            # survivors collectively waited out the residual — their
+            # heartbeat deadlines must not count the repair (same rule
+            # as the blocking path's _refresh_liveness)
+            self._refresh_liveness()
+        return merged
 
     @staticmethod
     def _stamp_scope(report: RepairReport,
@@ -416,8 +505,11 @@ class LegioExecutor:
         cl = self.cluster
         results: dict[int, Any] = {}
         computed_shards = 0
+        busy = cl.repairing_participants()
         for node in cl.live_nodes:
             cl.detector.beat(node, cl.clock.sim_seconds)
+            if node in busy:
+                continue        # occupied by a background repair window
             shards = cl.plan.shards_of(node)
             if not shards:
                 continue
@@ -447,11 +539,11 @@ class LegioExecutor:
             elif self.final_collective == "reduce":
                 res = self.comm.reduce(contributions, self.root,
                                        self.reduce_op, gate=self._root_gate)
-                reduced = next(iter(res.data.values()))
+                reduced = next(iter(res.data.values()), None)
             elif self.final_collective == "bcast":
                 res = self.comm.bcast(contributions, self.root,
                                       gate=self._root_gate)
-                reduced = next(iter(res.data.values()))
+                reduced = next(iter(res.data.values()), None)
             else:
                 return None, 0.0
         except PeerFailedError:
@@ -517,6 +609,8 @@ class LegioExecutor:
                         if computed_shards else 0.0),
             expanded=boundary.expanded,
             respawned=boundary.respawned,
+            repairing=tuple(sorted(cl.repairing_participants())),
+            reconciled=boundary.reconciled,
         )
 
     def run(self, n_steps: int) -> list[StepReport]:

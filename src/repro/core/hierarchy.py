@@ -730,6 +730,34 @@ class TopologyView:
     def node_set(self) -> frozenset[int]:
         return frozenset(self._snap.nodes)
 
+    def restrict(self, exclude: "frozenset[int] | set[int]") -> "TopologyView":
+        """A structure-preserving sub-view with ``exclude`` members filtered
+        out — the healthy-subtree schedule during a background repair
+        window. Unlike a ``make_topology`` rebuild this keeps the original
+        legion indices, depth, and **epoch stamp** (per-subtree epoch
+        pinning: the survivors' collectives run on the same pinned epoch
+        they would without the repair, so excluding a busy scope never
+        repartitions the healthy subtrees or changes their alpha-beta
+        stage structure). A legion whose members are all busy steps out of
+        the ring for the window, exactly as if it had compacted away —
+        temporarily, on the view only; the live topology is untouched."""
+        busy = self.node_set & frozenset(exclude)
+        if not busy:
+            return self
+        legions = [Legion(index=lg.index,
+                          members=[m for m in lg.members if m not in busy])
+                   for lg in self._snap.legions]
+        view = TopologyView.__new__(TopologyView)
+        view.epoch = self.epoch
+        view._snap = LegionTopology(
+            k=self._snap.k,
+            legions=[lg for lg in legions if lg.members],
+            home={n: i for n, i in self._snap.home.items() if n not in busy},
+            epoch=self._snap.epoch,
+            depth=self._snap.depth,
+        )
+        return view
+
     def __repr__(self) -> str:
         return (f"TopologyView(epoch={self.epoch}, size={self._snap.size}, "
                 f"legions={self._snap.n_legions}, depth={self._snap.depth})")

@@ -268,6 +268,7 @@ class FaultPipeline:
 
         sources = tuple(sorted({e.source for e in events},
                                key=lambda s: s.value))
+        windows = {id(br.report) for br in self.cluster.background}
         actions = [
             RecoveryAction(
                 step=step,
@@ -278,6 +279,9 @@ class FaultPipeline:
                 terminal=True,
                 stage_seconds=dict(timings),
                 scope=scope,
+                # the repair's charge went to a background window instead
+                # of the clock — still open when the action is emitted
+                overlapped=id(report) in windows,
             )
             for scope, report in repaired
         ]

@@ -97,6 +97,14 @@ class LegioPolicy:
     # the topology then re-expands at the next step boundary.
     nonblocking_substitution: bool = False
     spare_warmup_steps: int = 1
+    # --- background (overlapped) repair: revoke-then-repair. The structural
+    # repair still lands inside the drain, but its clock charge is deferred
+    # to a BackgroundRepair window — healthy subtrees keep issuing
+    # collectives on their pinned epoch while the torn scope's survivors
+    # stay busy (excluded from schedules) until the window's finish_sim
+    # passes; membership reconciles at the next Session boundary. Applies
+    # to every recovery_mode whose strategy declares overlap_safe.
+    repair_overlap: bool = False
     # baseline simulated seconds charged per step — this is what makes the
     # heartbeat channel live: with no collective (final_collective="none")
     # the sim clock still advances, so a silent node eventually crosses

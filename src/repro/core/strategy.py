@@ -27,6 +27,19 @@ shrink FIRST, then checks the pool — so a strict-mode
 :class:`SparePoolExhausted` always propagates from a *consistent* (shrunk)
 topology, with the committed shrink report attached as ``partial_report``.
 
+Overlap axis (``LegioPolicy.repair_overlap``, the revoke-then-repair mode):
+rather than a separate BackgroundRepairStrategy, every registered strategy
+carries an ``overlap_safe`` class attribute. A strategy is overlap-safe
+when its structural mutation is atomic within the drain — the topology it
+leaves behind is fully applied the moment ``repair`` returns, so deferring
+only the *clock charge* to a :class:`~repro.core.types.BackgroundRepair`
+window cannot expose a half-applied group. All three built-ins qualify
+(the non-blocking substitute's deferred splice goes through its own
+pending-queue machinery, orthogonal to the window). Set
+``overlap_safe = False`` on a future strategy whose mutation spans calls
+(e.g. incremental checkpoint restore) and ``VirtualCluster`` falls back to
+blocking charges for it, policy knob notwithstanding.
+
 Invariants every strategy must preserve (asserted by tests/test_pipeline.py,
 tests/test_substitute.py, and tests/test_serve.py):
 
@@ -115,6 +128,11 @@ def make_strategy(policy: LegioPolicy) -> RecoveryStrategy:
 
 
 class _PolicyBound:
+    # structural mutation is atomic within the drain for every built-in, so
+    # the clock charge may be deferred to a background window (see module
+    # docstring); strategies whose mutation spans calls override to False
+    overlap_safe: bool = True
+
     def __init__(self, policy: LegioPolicy):
         self.policy = policy
 

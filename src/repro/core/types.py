@@ -139,6 +139,10 @@ class RecoveryAction:
     # per disjoint scope, so faults in unrelated subtrees land as separate,
     # concurrently-applied actions
     scope: RepairScope | None = None
+    # the repair's clock charge was deferred to a background window
+    # (LegioPolicy.repair_overlap): the structure mutated eagerly, but the
+    # scope's participants stay busy until the window's finish_sim passes
+    overlapped: bool = False
 
 
 @dataclass(frozen=True)
@@ -196,9 +200,62 @@ class RepairReport:
 
 
 @dataclass
+class BackgroundRepair:
+    """One in-flight overlapped repair window (revoke-then-repair).
+
+    The structural repair has already landed (topology mutated, detector
+    confirmed, report recorded) — what is *deferred* is the repair's clock
+    charge: the scope occupies the simulated interval
+    ``[start_sim, finish_sim]`` while healthy subtrees keep computing.
+    Until the cluster clock passes ``finish_sim`` the scope's surviving
+    ``participants`` are busy: collective schedules exclude them and their
+    p2p envelopes stay pending in the ledger (never discarded — they were
+    posted to live nodes). ``VirtualCluster.reconcile_repairs`` merges the
+    window back at the first ``Session`` boundary whose clock has passed
+    ``finish_sim`` — by construction with zero residual wait, so a repair
+    shorter than one step of compute is fully hidden.
+    """
+
+    scope: RepairScope
+    report: RepairReport
+    start_step: int
+    start_sim: float
+    finish_sim: float
+
+    @property
+    def busy(self) -> tuple[int, ...]:
+        """Surviving nodes occupied by this repair for the window."""
+        return self.scope.participants
+
+    def done(self, now: float) -> bool:
+        return self.finish_sim <= now + 1e-12
+
+    def residual(self, now: float) -> float:
+        """Sim-seconds of the repair not yet hidden behind compute."""
+        return max(0.0, self.finish_sim - now)
+
+
+@dataclass
 class ClusterClock:
-    """Simulated time accumulator (repair cost model) + real wall time."""
+    """Simulated time accumulator (repair cost model) + real wall time.
+
+    Overlapped repairs split their cost into the part *absorbed* behind
+    concurrent compute (never added to ``sim_seconds``) and the *residual*
+    the application actually waited for (charged like any other cost) —
+    the chaos harness asserts ``residual_seconds == 0`` for disjoint-scope
+    overlap runs: healthy subtrees never pay for a remote scope's repair.
+    """
+
     sim_seconds: float = 0.0
+    hidden_seconds: float = 0.0      # overlapped repair cost fully absorbed
+    residual_seconds: float = 0.0    # overlapped repair cost waited out
 
     def charge(self, seconds: float) -> None:
+        self.sim_seconds += seconds
+
+    def absorb(self, seconds: float) -> None:
+        self.hidden_seconds += seconds
+
+    def wait(self, seconds: float) -> None:
+        self.residual_seconds += seconds
         self.sim_seconds += seconds

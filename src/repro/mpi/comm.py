@@ -214,13 +214,28 @@ class Comm:
             f"{op}: repair did not converge after {_MAX_REPAIR_ROUNDS} "
             f"rounds on comm {self.name!r}")
 
-    def _schedule_topo(self, view):
-        """Structure the schedules run over: the pinned world view, or the
-        derived sub-topology for a fixed-group comm (cached per epoch +
-        membership — a repair invalidates it, nothing else does)."""
+    def _busy(self) -> frozenset[int]:
+        """Survivors occupied by an in-flight background repair window
+        (empty outside overlap mode) — excluded from schedules and
+        contribution sets until their window reconciles."""
+        return frozenset(self.session.cluster.repairing_participants())
+
+    def _schedule_topo(self, view, busy: frozenset[int] = frozenset()):
+        """Structure the schedules run over: the pinned world view (its
+        busy-restricted sub-view during an overlap window), or the derived
+        sub-topology for a fixed-group comm.
+
+        The fixed-group cache is keyed by epoch + the *effective* live
+        membership, busy exclusions included. Keying on raw membership was
+        the latent ordering hazard background repair exposes: a window
+        opening or closing changes the schedule without bumping the epoch,
+        so a (epoch, members) key would happily serve a stale sub-topology
+        that still contains mid-repair participants — a half-applied group.
+        """
         if self._group is None:
-            return view
-        live = [n for n in self._group if n in view.node_set]
+            return view.restrict(busy) if busy else view
+        live = [n for n in self._group
+                if n in view.node_set and n not in busy]
         key = (view.epoch, tuple(live))
         if self._sub_key != key:
             self._sub_topo = make_topology(
@@ -232,12 +247,23 @@ class Comm:
                                          CollectiveResult]
              ) -> CollectiveResult:
         """Run one schedule against a pinned view of the (repaired)
-        structure and charge its alpha-beta time to the cluster clock."""
+        structure and charge its alpha-beta time to the cluster clock.
+
+        During a background repair window the schedule runs over the
+        survivors *outside* the window (healthy subtrees progress on their
+        pinned epoch — the revoke half of revoke-then-repair). If every
+        member is busy there is no healthy subtree to make progress:
+        the call synchronizes (force-finishing the windows, charging the
+        residual) and runs full-membership."""
         cl = self.session.cluster
+        busy = self._busy()
+        if busy and not any(n not in busy for n in self.members):
+            self.session.sync()
+            busy = frozenset()
         with cl.topo.pinned() as view:
             for _key, hook in self._hooks:
                 hook(op, view)
-            res = fn(cl.collectives(self._schedule_topo(view)))
+            res = fn(cl.collectives(self._schedule_topo(view, busy)))
         cl.clock.charge(res.sim_seconds)
         self.stats.record_op(res)
         return res
@@ -275,6 +301,7 @@ class Comm:
         self._call()
         self._resolve("bcast", root=root, gate=gate)
         rt = self._effective_root(root)
+        self._sync_if_busy(rt)
         if isinstance(payload, dict):
             payload = payload.get(rt, np.zeros(1))
         return self._run("bcast", lambda coll: coll.bcast(rt, payload))
@@ -287,6 +314,8 @@ class Comm:
         self._call()
         self._resolve("reduce", root=root, gate=gate)
         rt = self._effective_root(root)
+        self._sync_if_busy(rt)
+        self._sync_if_no_healthy_contributor(contributions)
         return self._run("reduce", lambda coll: coll.reduce(
             rt, self._filter(contributions), op))
 
@@ -296,12 +325,18 @@ class Comm:
         """All-to-all (reduce + bcast, §V). No root — never PeerFailedError."""
         self._call()
         self._resolve("allreduce", gate=gate)
+        self._sync_if_no_healthy_contributor(contributions)
         return self._run("allreduce", lambda coll: coll.allreduce(
             self._filter(contributions), op))
 
     def barrier(self) -> CollectiveResult:
+        """All-hands synchronization — the one collective that *cannot*
+        exclude a repairing scope: in-flight background repair windows are
+        force-finished first (their residual charged), exactly the
+        "overlap is unsafe" escape hatch docs/recovery-modes.md names."""
         self._call()
         self._resolve("barrier")
+        self.session.sync()
         return self._run("barrier", lambda coll: coll.barrier())
 
     def gather(self, contributions: dict[int, object] | None = None,
@@ -316,9 +351,32 @@ class Comm:
         alive = set(self.session.cluster.topo.nodes)
         return {n: v for n, v in (contributions or {}).items() if n in alive}
 
+    def _sync_if_busy(self, root: int) -> None:
+        """A rooted op whose root sits inside a repairing scope cannot
+        proceed degraded (the result must materialize *at the root*):
+        force-finish the windows — the root's repair is waited out as
+        residual, the documented overlap-unsafe case."""
+        if root in self._busy():
+            self.session.sync()
+
+    def _sync_if_no_healthy_contributor(
+            self, contributions: dict[int, np.ndarray]) -> None:
+        """If the drain inside this very call opened a window that
+        swallowed *every* surviving contributor (the torn scope was the
+        whole contributing set), there is no healthy subtree to carry the
+        op: synchronize — the same overlap-unsafe escape hatch as the
+        all-busy-members guard — before the schedule topology is built,
+        so the op then runs full-membership."""
+        busy = self._busy()
+        if not busy or not contributions:
+            return
+        alive = set(self.members) - busy
+        if not any(n in alive for n in contributions):
+            self.session.sync()
+
     def _filter(self, contributions: dict[int, np.ndarray]
                 ) -> dict[int, np.ndarray]:
-        alive = set(self.members)
+        alive = set(self.members) - self._busy()
         return {n: np.asarray(v) for n, v in contributions.items()
                 if n in alive}
 
@@ -408,8 +466,21 @@ class Comm:
 
     def comm_split(self, colors: dict[int, int]) -> dict[int, "Comm"]:
         """MPI_Comm_split, driver-side: ``colors`` maps member -> color;
-        returns one fixed-group comm per color. A comm-creator involves
-        every member (§V), so the whole comm is repaired clean first."""
+        returns one fixed-group comm per color.
+
+        Built from **surviving groups** (Rocco & Palermo's fault-aware
+        non-collective creation): the drain inside the call repairs the
+        structure eagerly, so the groups are read from post-repair
+        membership — there is no whole-comm *blocking* repair-first
+        precondition. Under background repair the drain merely opens a
+        window (no clock charge) and the creator schedule runs over the
+        survivors outside it; a busy-but-alive participant is still a
+        member of the new comm (membership is structural, not a schedule
+        property — it rejoins schedules when its window reconciles), and
+        the repaired-out dead never appear. A split mid-window therefore
+        observes the fully-applied post-repair group, never a torn one
+        (the regression test in tests/test_mpi.py diffs this against the
+        blocking path as oracle)."""
         self._call()
         self._resolve("comm_creator")
         self._run("comm_creator", lambda coll: coll.comm_create())
@@ -425,7 +496,9 @@ class Comm:
         }
 
     def comm_dup(self) -> "Comm":
-        """MPI_Comm_dup: same group, fresh message-matching context."""
+        """MPI_Comm_dup: same group, fresh message-matching context. Like
+        :meth:`comm_split`, builds from the surviving post-repair group —
+        non-blocking under an in-flight background repair window."""
         self._call()
         self._resolve("comm_creator")
         self._run("comm_creator", lambda coll: coll.comm_create())

@@ -25,7 +25,13 @@ from dataclasses import dataclass
 from typing import Callable, Iterable
 
 from repro.core.executor import VirtualCluster
-from repro.core.types import FaultEvent, FaultSource, RecoveryAction, RepairReport
+from repro.core.types import (
+    FaultEvent,
+    FaultSource,
+    RecoveryAction,
+    RepairReport,
+    RepairScope,
+)
 from repro.mpi.comm import Comm
 from repro.mpi.errors import MPISessionError
 
@@ -41,6 +47,7 @@ class BoundaryReport:
     expansions: tuple[RepairReport, ...] = ()       # non-blocking splices
     actions: tuple[RecoveryAction, ...] = ()        # INJECTED-channel drains
     injected: tuple[int, ...] = ()                  # ground-truth arrivals
+    reconciled: tuple[RepairScope, ...] = ()        # overlap windows merged
 
     @property
     def expanded(self) -> tuple[tuple[int, int], ...]:
@@ -112,16 +119,31 @@ class Session:
         return self._step
 
     def deliver(self, step: int | None = None) -> BoundaryReport:
-        """Boundary half 1: elastic re-spawned spares arrive and warmed-up
-        non-blocking substitutes rejoin. (The serve engine runs this before
-        dispatch and :meth:`inject` after — faults land mid-flight.)"""
+        """Boundary half 1: background repair windows the clock has passed
+        reconcile (membership merges back — the deferred half of
+        revoke-then-repair, always with zero residual here), then elastic
+        re-spawned spares arrive and warmed-up non-blocking substitutes
+        rejoin. (The serve engine runs this before dispatch and
+        :meth:`inject` after — faults land mid-flight.)"""
         self.ensure_active()
         step = self._begin(step)
         cl = self.cluster
+        reconciled = tuple(br.scope for br in cl.reconcile_repairs())
         respawned = cl.poll_provisioner(step)
         expansions = cl.poll_substitutions(step)
         return BoundaryReport(step=step, respawned=tuple(respawned),
-                              expansions=tuple(expansions))
+                              expansions=tuple(expansions),
+                              reconciled=reconciled)
+
+    def sync(self) -> tuple[RepairScope, ...]:
+        """Force-finish every in-flight background repair window *now*,
+        charging the unhidden remainder as residual wait — the explicit
+        synchronization point (``Comm.barrier`` calls this; so does any
+        rooted op whose root is busy repairing). Returns the merged
+        scopes; a no-op when nothing is in flight."""
+        self.ensure_active()
+        return tuple(br.scope
+                     for br in self.cluster.reconcile_repairs(force=True))
 
     def inject(self, step: int | None = None, *,
                charge: bool = True) -> tuple[int, ...]:
@@ -155,7 +177,7 @@ class Session:
                 rep.step, sources=(FaultSource.INJECTED,)))
         return BoundaryReport(step=rep.step, respawned=rep.respawned,
                               expansions=rep.expansions, actions=actions,
-                              injected=injected)
+                              injected=injected, reconciled=rep.reconciled)
 
     def advance(self, step: int | None = None) -> BoundaryReport:
         """The standalone app's step tick: run the boundary at ``step``

@@ -77,13 +77,17 @@ from repro.serve.traffic import Arrival
 # work_fn(node, batch, step) -> {rid: result}
 WorkFn = Callable[[int, list[Request], int], dict[int, Any]]
 
-RECOVERY_PRESETS = ("shrink", "substitute", "nonblocking")
+RECOVERY_PRESETS = ("shrink", "substitute", "nonblocking", "overlap")
 
 
 def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
     """Canonical ``LegioPolicy`` overrides for the serving recovery setups —
     the CLI (launch/serve.py), the benchmark (serve_latency), and the tests
-    share this single source instead of drifting copies."""
+    share this single source instead of drifting copies. ``overlap`` is
+    shrink with background (revoke-then-repair) windows: a torn scope's
+    repair happens concurrently on the sim clock while healthy legions
+    keep serving — continuous batching never parks their slots on a
+    remote scope's repair."""
     presets = {
         "shrink": dict(recovery_mode="shrink"),
         "substitute": dict(recovery_mode="substitute_then_shrink",
@@ -91,6 +95,7 @@ def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
         "nonblocking": dict(recovery_mode="substitute_then_shrink",
                             spare_fraction=spare_fraction,
                             nonblocking_substitution=True),
+        "overlap": dict(recovery_mode="shrink", repair_overlap=True),
     }
     return presets[name]
 
@@ -407,10 +412,16 @@ class ServeEngine:
         now = cl.clock.sim_seconds
         tick = cl.policy.step_sim_seconds
         dispatched: dict[int, int] = {}
+        busy = cl.repairing_participants()
         with cl.topo.pinned() as tv:
             self.router.reconcile(tv)
             for lg in tv.legions:
-                members = [n for n in lg.members if n not in cl.failed]
+                # a member busy in a background repair window serves
+                # nothing this round — but only ITS slots pause: healthy
+                # legions (and this legion's other members) admit freely,
+                # never parked on a remote scope's repair
+                members = [n for n in lg.members
+                           if n not in cl.failed and n not in busy]
                 if not members:
                     continue
                 queue = self.router.queue_of(lg.index)
@@ -479,9 +490,12 @@ class ServeEngine:
         in-flight requests one phase tick; finished requests complete and
         free their slot for next tick's admission."""
         cl = self.cluster
+        busy = cl.repairing_participants()
         for node in sorted(self._slots):
             if node in cl.failed:
                 continue        # dead mid-flight: the drain migrates it
+            if node in busy:
+                continue        # repairing: its batches stall, not migrate
             ready: list[Request] = []
             kept: list[_Slot] = []
             for slot in self._slots[node]:
@@ -512,6 +526,10 @@ class ServeEngine:
         restart from prefill; decode-state migration is a
         continuous-batching capability."""
         cl = self.cluster
+        if cl.background:
+            # a round barrier is all-hands: background repair windows
+            # cannot ride through it — force-finish, charging the residual
+            self.session.sync()
         max_ticks = max(
             (r.service_ticks_remaining
              for slots in self._slots.values()

@@ -256,6 +256,79 @@ def test_comm_split_subgroup_shrinks_with_faults():
     assert res.data[0][0] == 7.0
 
 
+def test_comm_split_mid_repair_matches_blocking_oracle():
+    """The latent split-ordering hazard, pinned: a comm_split issued while
+    a background repair window is in flight must build from the surviving
+    post-repair groups — never observe a half-applied group (a dead node
+    still present, or a busy-but-alive participant missing). The blocking
+    path under the identical fault schedule is the oracle."""
+    def split_after_fault(overlap: bool):
+        pol = LegioPolicy(legion_size=4, hierarchy_depth=3,
+                          recovery_mode="shrink", repair_overlap=overlap)
+        sess = Session(64, policy=pol, injector=FaultInjector.at([(1, 20)]))
+        comm = sess.world
+        sess.advance(0)
+        comm.allreduce({m: np.array([1.0]) for m in sess.cluster.live_nodes})
+        sess.advance(1)                           # node 20 (a master) dies
+        comm.allreduce({m: np.array([1.0])        # trap + repair (+ window)
+                        for m in sess.cluster.live_nodes})
+        if overlap:
+            assert sess.cluster.background        # window really in flight
+        subs = comm.comm_split({m: m % 3 for m in comm.members})
+        groups = {c: tuple(sub.members) for c, sub in subs.items()}
+        return sess, subs, groups
+
+    blocking = split_after_fault(overlap=False)[2]
+    sess, subs, groups = split_after_fault(overlap=True)
+    assert groups == blocking                     # oracle: identical groups
+    assert all(20 not in g for g in groups.values())   # the dead never appear
+    busy = sess.cluster.repairing_participants()
+    assert busy                                   # split ran mid-window...
+    for node in busy:                             # ...but busy stay members
+        assert node in set(groups[node % 3])
+    # the sub-comm is immediately usable mid-window: its schedule excludes
+    # the busy participants, yet membership keeps them
+    color = next(c for c, g in groups.items() if set(g) & busy)
+    res = subs[color].allreduce({m: np.array([1.0])
+                                 for m in subs[color].members
+                                 if m not in sess.cluster.failed})
+    assert set(res.data) == set(subs[color].members) - busy
+    # after the window reconciles, the same sub-comm runs full-membership
+    for step in (2, 3):
+        sess.advance(step)
+    assert not sess.cluster.background
+    res = subs[color].allreduce({m: np.array([1.0])
+                                 for m in subs[color].members})
+    assert set(res.data) == set(subs[color].members)
+    assert sess.cluster.clock.residual_seconds == 0.0
+
+
+def test_comm_split_mid_repair_nonblocking_substitution():
+    """Same hazard under the non-blocking substitute strategy: the split
+    mid-window reads the post-shrink group, and the spare's later splice
+    lands in the world comm without resurrecting the dead node in the
+    fixed-group sub-comms."""
+    pol = LegioPolicy(legion_size=4, recovery_mode="substitute_then_shrink",
+                      nonblocking_substitution=True, spare_fraction=0.25,
+                      repair_overlap=True)
+    sess = Session(16, policy=pol, injector=FaultInjector.at([(1, 5)]))
+    comm = sess.world
+    sess.advance(0)
+    comm.allreduce({m: np.array([1.0]) for m in sess.cluster.live_nodes})
+    sess.advance(1)
+    comm.allreduce({m: np.array([1.0]) for m in sess.cluster.live_nodes})
+    subs = comm.comm_split({m: m % 2 for m in comm.members})
+    assert 5 not in subs[1].members               # shrunk out, mid-window
+    for step in range(2, 7):                      # splice + window merge
+        sess.advance(step)
+        comm.allreduce({m: np.array([1.0]) for m in sess.cluster.live_nodes})
+    assert not sess.cluster.background
+    spares = [n for n in comm.members if n >= 16]
+    assert spares                                 # the splice landed (world)
+    assert 5 not in subs[1].members               # sub-group stays shrunk
+    assert not set(spares) & set(subs[0].members + subs[1].members)
+
+
 def test_comm_dup_is_a_separate_matching_context():
     sess = healthy_session(8)
     comm = sess.world
