@@ -33,13 +33,13 @@ docs:
 # fast, pure-python benchmark smoke: repair-time (incl. substitution) + the
 # background-repair overlap proof + Eq. 3/4 + N-level scoped-repair scaling
 # + MPI-facade transparency overhead + the correlated-failure invariant
-# matrix + the serving load curve
+# matrix + the serving load curve + peer-restore/adaptive recovery costs
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 overlap optimal_k hierarchy_scaling interposition chaos serve
+	$(PYTHON) -m benchmarks.run fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost
 
-# same smoke, plus machine-readable results in BENCH_PR8.json (CI artifact)
+# same smoke, plus machine-readable results in BENCH_PR9.json (CI artifact)
 bench-json:
-	$(PYTHON) -m benchmarks.run --json fig10 overlap optimal_k hierarchy_scaling interposition chaos serve
+	$(PYTHON) -m benchmarks.run --json fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost
 
 # the transparency claim, live: an unmodified MPI-shaped loop surviving faults
 mpi-demo:

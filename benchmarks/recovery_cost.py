@@ -1,0 +1,206 @@
+"""Peer-replicated restore cost + adaptive recovery dominance (PR 9).
+
+Two claims, both structural (deterministic byte/sim-second accounting; wall
+clocks are reported but never asserted — CI machines vary):
+
+(a) **Peer restore is O(shard)**: restoring a substituted rank from its
+    POV-ring buddy touches exactly the member's shard bytes and charges one
+    link-model cross transfer, independent of how many members (= how much
+    total model) the checkpoint covers. The store path re-reads the
+    manifest (O(members) entries) plus the member npz, and its simulated
+    charge is the flat ``SubstituteCostModel.restore_seconds`` — the peer
+    charge sits strictly below it at the default config.
+
+(b) **Adaptive dominance**: over a fault-rate x checkpoint-interval grid,
+    the ``adaptive`` mode's realized recovery overhead (simulated makespan
+    minus the fault-free ideal for the same fixed work) is <= every static
+    preset's in every cell. The presets mirror
+    ``repro.serve.engine.recovery_preset`` (each mode in its canonical
+    configuration); adaptive runs without overlap windows so every repair
+    charge lands on the clock and the comparison is apples-to-apples.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.checkpoint import store
+from repro.checkpoint.replicate import ShardReplicator
+from repro.core.collectives import LinkModel
+from repro.core.cr import LegionCheckpointer
+from repro.core.detector import FaultInjector
+from repro.core.executor import LegioExecutor, VirtualCluster
+from repro.core.hierarchy import make_topology
+from repro.core.policy import LegioPolicy
+from repro.core.substitute import SubstituteCostModel
+
+EPS = 1e-6
+
+# -- (a) O(shard) peer restore ------------------------------------------------
+
+SHARD_FLOATS = 4096          # fixed per-member shard: 16 KiB of float32
+MEMBER_COUNTS = (8, 32, 128)  # total model grows 16x; the shard does not
+
+
+def _shards_for(topo) -> dict:
+    return {(lg.index, n): {"w": np.full(SHARD_FLOATS, n, dtype=np.float32)}
+            for lg in topo.legions for n in lg.members}
+
+
+def bench_peer_restore() -> list[dict]:
+    """Bytes touched + simulated charge per restore path, vs model size."""
+    rows = []
+    # hierarchical even at the smallest size: the POV ring (and with it the
+    # replica buddy map) only exists with more than one legion
+    pol = LegioPolicy(legion_size=4, hierarchical_threshold=4)
+    cost = SubstituteCostModel()
+    for m in MEMBER_COUNTS:
+        topo = make_topology(list(range(m)), pol)
+        shards = _shards_for(topo)
+        tmp = tempfile.mkdtemp(prefix="recovery_cost_")
+        try:
+            store.save(tmp, 0, shards)
+            victim = topo.legions[0].members[-1]
+            legion = topo.legions[0].index
+            sdir = os.path.join(tmp, "step_000000")
+            manifest_bytes = os.path.getsize(
+                os.path.join(sdir, "manifest.json"))
+            npz_bytes = os.path.getsize(
+                os.path.join(sdir, store.member_relpath(legion, victim)))
+            t0 = time.perf_counter()
+            store.restore_member(tmp, 0, legion, victim)
+            store_wall = time.perf_counter() - t0
+
+            repl = ShardReplicator(link=LinkModel())   # no ledger: direct
+            repl.push_map(0, topo, shards)
+            record = repl.replicas[victim]
+            peer_bytes = record.nbytes
+            peer_secs = repl.transfer_seconds(peer_bytes)
+            t0 = time.perf_counter()
+            repl.restore(victim, topo, failed=set())
+            peer_wall = time.perf_counter() - t0
+            rows.append({
+                "members": m,
+                "model_mb": round(m * SHARD_FLOATS * 4 / 2 ** 20, 3),
+                "store_bytes": manifest_bytes + npz_bytes,
+                "peer_bytes": peer_bytes,
+                "store_sim_s": cost.restore_seconds,
+                "peer_sim_s": peer_secs,
+                "store_wall_ms": round(store_wall * 1e3, 3),
+                "peer_wall_ms": round(peer_wall * 1e3, 3),
+            })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # O(shard): the peer path is flat in model size; the store path grows
+    peer = [r["peer_bytes"] for r in rows]
+    assert len(set(peer)) == 1, f"peer restore bytes not flat: {peer}"
+    stored = [r["store_bytes"] for r in rows]
+    assert all(a < b for a, b in zip(stored, stored[1:])), \
+        f"store restore bytes did not grow with the model: {stored}"
+    assert all(r["peer_sim_s"] < cost.restore_seconds for r in rows), \
+        "peer transfer charge not below the store restore charge"
+    return rows
+
+
+# -- (b) adaptive dominance grid ----------------------------------------------
+
+N_NODES = 16
+SHARDS_PER_NODE = 1
+WORK_STEPS = 40                         # fault-free ideal: WORK_STEPS steps
+TOTAL_WORK = N_NODES * SHARDS_PER_NODE * WORK_STEPS
+SPARE_FRACTION = 0.25
+
+MODES = {
+    "shrink": dict(recovery_mode="shrink"),
+    "substitute": dict(recovery_mode="substitute_then_shrink",
+                       spare_fraction=SPARE_FRACTION),
+    "nonblocking": dict(recovery_mode="substitute_then_shrink",
+                        spare_fraction=SPARE_FRACTION,
+                        nonblocking_substitution=True),
+    "adaptive": dict(recovery_mode="adaptive",
+                     spare_fraction=SPARE_FRACTION),
+}
+
+FAULT_PERIODS = (0, 12, 5)              # steps between kills; 0 = none
+CHECKPOINT_EVERY = (2, 8)
+
+
+def _injector(period: int) -> FaultInjector:
+    if period <= 0:
+        return FaultInjector()
+    victims = [n for n in range(1, N_NODES) if n % 2 == 1]  # never the root
+    pairs = [(period * (i + 1), v) for i, v in enumerate(victims)
+             if period * (i + 1) < WORK_STEPS - 4]
+    return FaultInjector.at(pairs)
+
+
+def _run_cell(mode: str, period: int, ck_every: int) -> float:
+    """Recovery overhead (sim s) for one (mode, fault-rate, ckpt) config.
+
+    Runs a fixed WORK_STEPS-step campaign and charges two exact terms:
+    the sim-clock seconds above the fault-free ideal (repair charges), and
+    the work deficit converted at the full-cluster rate — every slot-step
+    lost to a shrunk topology costs exactly ``step_sim / n`` seconds, so
+    capacity loss is never hidden by end-of-run step quantization."""
+    pol = LegioPolicy(legion_size=4, **MODES[mode])
+    tmp = tempfile.mkdtemp(prefix=f"recovery_cost_{mode}_")
+    try:
+        ck = LegionCheckpointer(tmp, async_writes=False)
+        cluster = VirtualCluster(N_NODES, policy=pol,
+                                 injector=_injector(period),
+                                 shards_per_node=SHARDS_PER_NODE,
+                                 checkpointer=ck)
+        ex = LegioExecutor(cluster, lambda n, s, step: 1.0)
+        done = 0
+        for step in range(WORK_STEPS):
+            if step % ck_every == 0:
+                ck.save(step, cluster.topo,
+                        lambda n: {"w": np.full(64, n, dtype=np.float32)},
+                        sync=True)
+            report = ex.run_step(step)
+            done += sum(len(cluster.plan.shards_of(n))
+                        for n in report.results)
+        ideal = WORK_STEPS * pol.step_sim_seconds
+        deficit = max(0, TOTAL_WORK - done)
+        return (cluster.clock.sim_seconds - ideal
+                + deficit * pol.step_sim_seconds / N_NODES)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def bench_dominance() -> list[dict]:
+    rows = []
+    for period in FAULT_PERIODS:
+        for ck_every in CHECKPOINT_EVERY:
+            cell = {"fault_period": period, "ckpt_every": ck_every}
+            for mode in MODES:
+                cell[mode] = round(_run_cell(mode, period, ck_every), 6)
+            rows.append(cell)
+    for cell in rows:
+        for mode in MODES:
+            if mode == "adaptive":
+                continue
+            assert cell["adaptive"] <= cell[mode] + EPS, (
+                f"adaptive overhead {cell['adaptive']} exceeds {mode} "
+                f"{cell[mode]} in cell {cell}")
+    return rows
+
+
+def main() -> dict:
+    peer_rows = bench_peer_restore()
+    emit(peer_rows, "(a) restore path bytes + charges vs model size "
+                    "(peer flat, store grows)")
+    grid_rows = bench_dominance()
+    emit(grid_rows, "(b) recovery overhead (sim s above fault-free ideal) "
+                    "per mode; adaptive <= every static mode per cell")
+    return {"peer_restore": peer_rows, "dominance": grid_rows}
+
+
+if __name__ == "__main__":
+    main()

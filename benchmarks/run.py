@@ -4,10 +4,10 @@
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
   PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
                                                      # + machine-readable
-                                                     #   BENCH_PR7.json
+                                                     #   BENCH_PR9.json
 
 ``--json`` records per-suite status/wall-seconds (and whatever dict a
-suite's ``main()`` returns) to ``BENCH_PR7.json`` — the CI artifact. The
+suite's ``main()`` returns) to ``BENCH_PR9.json`` — the CI artifact. The
 asserts inside the suites stay structural (the bench-smoke convention);
 the JSON is for dashboards, not pass/fail.
 """
@@ -39,9 +39,11 @@ SUITES = [
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
     ("chaos_campaign", "benchmarks.chaos_campaign",
      "§III-V fault-model zoo"),
+    ("recovery_cost", "benchmarks.recovery_cost",
+     "beyond-paper peer restore + adaptive recovery"),
 ]
 
-JSON_PATH = "BENCH_PR8.json"
+JSON_PATH = "BENCH_PR9.json"
 
 
 def main() -> int:

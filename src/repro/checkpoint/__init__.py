@@ -6,10 +6,24 @@ from repro.checkpoint.store import (
     restore_member,
     save,
 )
+from repro.checkpoint.replicate import (
+    REPLICA_TAG,
+    PeerRestore,
+    ReplicaIntegrityError,
+    ReplicaRecord,
+    ReplicaUnavailable,
+    ShardReplicator,
+)
 
 __all__ = [
     "AsyncCheckpointer",
     "CheckpointManifest",
+    "PeerRestore",
+    "REPLICA_TAG",
+    "ReplicaIntegrityError",
+    "ReplicaRecord",
+    "ReplicaUnavailable",
+    "ShardReplicator",
     "latest_step",
     "restore",
     "restore_member",

@@ -212,6 +212,15 @@ def _load_npz(path: str, info: dict, template: PyTree | None, verify: bool) -> P
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
 
 
+def _read_manifest(sdir: str) -> CheckpointManifest:
+    with open(os.path.join(sdir, "manifest.json")) as f:
+        return CheckpointManifest.from_json(f.read())
+
+
+def member_relpath(legion: int, node: int) -> str:
+    return os.path.join(f"legion_{legion:02d}", f"member_{node:03d}.npz")
+
+
 def restore_member(
     directory: str,
     step: int,
@@ -220,12 +229,17 @@ def restore_member(
     *,
     template: PyTree | None = None,
     verify: bool = True,
+    manifest: CheckpointManifest | None = None,
 ) -> PyTree:
-    """Load exactly one member's shard — the restart-only-failed path."""
+    """Load exactly one member's shard — the restart-only-failed path.
+
+    ``manifest`` lets a caller that already parsed the step's manifest
+    (``restore`` loops over every member) thread it through instead of
+    re-opening and re-parsing ``manifest.json`` per member."""
     sdir = _step_dir(directory, step)
-    with open(os.path.join(sdir, "manifest.json")) as f:
-        manifest = CheckpointManifest.from_json(f.read())
-    rel = os.path.join(f"legion_{legion:02d}", f"member_{node:03d}.npz")
+    if manifest is None:
+        manifest = _read_manifest(sdir)
+    rel = member_relpath(legion, node)
     if rel not in manifest.files:
         raise FileNotFoundError(f"no shard for legion={legion} node={node} at step {step}")
     return _load_npz(os.path.join(sdir, rel), manifest.files[rel], template, verify)
@@ -238,15 +252,14 @@ def restore(
     template: PyTree | None = None,
     verify: bool = True,
 ) -> tuple[CheckpointManifest, dict[tuple[int, int], PyTree]]:
-    sdir = _step_dir(directory, step)
-    with open(os.path.join(sdir, "manifest.json")) as f:
-        manifest = CheckpointManifest.from_json(f.read())
+    manifest = _read_manifest(_step_dir(directory, step))
     shards = {}
     for legion_s, nodes in manifest.members.items():
         for node in nodes:
             legion = int(legion_s)
             shards[(legion, node)] = restore_member(
-                directory, step, legion, node, template=template, verify=verify)
+                directory, step, legion, node, template=template,
+                verify=verify, manifest=manifest)
     return manifest, shards
 
 
@@ -285,19 +298,29 @@ class AsyncCheckpointer:
                 self._q.task_done()
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_"))
-        for s in steps[:-self.keep] if self.keep > 0 else []:
+        # Retention counts manifest-complete steps only: a partial dir (no
+        # manifest.json — a crashed write) must not consume a keep slot, and
+        # it is swept outright. The write queue is serial, so any
+        # manifest-less dir here is a dead leftover, never an in-flight save.
+        complete, partial = [], []
+        for name in os.listdir(self.directory):
+            if not name.startswith("step_"):
+                continue
+            step = int(name.split("_")[1])
+            if os.path.exists(os.path.join(self.directory, name,
+                                           "manifest.json")):
+                complete.append(step)
+            else:
+                partial.append(step)
+        doomed = sorted(complete)[:-self.keep] if self.keep > 0 else []
+        for s in doomed + partial:
             sdir = _step_dir(self.directory, s)
-            manifest = os.path.join(sdir, "manifest.json")
-            if os.path.exists(manifest):
-                for root, _, names in os.walk(sdir, topdown=False):
-                    for n in names:
-                        os.unlink(os.path.join(root, n))
-                    if root != sdir:
-                        os.rmdir(root)
-                os.rmdir(sdir)
+            for root, _, names in os.walk(sdir, topdown=False):
+                for n in names:
+                    os.unlink(os.path.join(root, n))
+                if root != sdir:
+                    os.rmdir(root)
+            os.rmdir(sdir)
 
     def save_async(self, step: int, shards: dict[tuple[int, int], PyTree],
                    *, meta: dict | None = None) -> float:

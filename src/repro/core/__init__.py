@@ -67,6 +67,7 @@ from repro.core.hierarchy import (
 from repro.core.mesh_manager import CompileCache, DevicePool, MeshManager
 from repro.core.pipeline import FaultPipeline
 from repro.core.policy import (
+    RECOVERY_MODES,
     LegioPolicy,
     eq3_s_of_k,
     eq4_s_of_k,
@@ -76,6 +77,8 @@ from repro.core.policy import (
 )
 from repro.core.shrink import ShrinkCostModel, ShrinkEngine, failures_by_legion
 from repro.core.strategy import (
+    AdaptiveDecision,
+    CostModelStrategy,
     NonblockingSubstituteStrategy,
     RecoveryStrategy,
     ShrinkStrategy,
@@ -86,6 +89,7 @@ from repro.core.strategy import (
 )
 from repro.core.substitute import (
     PendingSubstitution,
+    RestoreOutcome,
     SparePool,
     SparePoolExhausted,
     SpareProvisioner,
@@ -93,6 +97,7 @@ from repro.core.substitute import (
     SubstituteEngine,
     UnfilledSlot,
     restore_for_substitute,
+    restore_member_state,
 )
 from repro.core.trainer import ResilientTrainer, TrainerReport, make_train_step
 from repro.core.types import (
@@ -111,16 +116,20 @@ from repro.core.types import (
 )
 
 __all__ = [
-    "BatchPlan", "ChaosAction", "ChaosEvent", "ChaosHarness", "ChaosReport",
-    "CompileCache", "DevicePool", "FailureEvent", "FailureKind",
+    "AdaptiveDecision", "BatchPlan", "ChaosAction", "ChaosEvent",
+    "ChaosHarness", "ChaosReport",
+    "CompileCache", "CostModelStrategy", "DevicePool",
+    "FailureEvent", "FailureKind",
     "FaultCampaign", "FaultEvent", "FaultInjector", "FaultModel",
     "FaultPipeline", "FaultSource",
     "HeartbeatDetector", "HierarchicalCollectives", "InvariantCheck",
     "Legion", "LegionCheckpointer", "LegionTopology", "LegioExecutor",
     "LegioPolicy", "LevelGroup", "LinkModel", "MeshManager", "NodeState",
     "NonblockingSubstituteStrategy", "OpStatus", "PendingSubstitution",
-    "PipelineTrace", "RecoveryAction", "RecoveryStrategy", "RepairReport",
-    "RepairScope", "RepairStep", "ResilientTrainer", "RootFailedError",
+    "PipelineTrace", "RECOVERY_MODES", "RecoveryAction", "RecoveryStrategy",
+    "RepairReport",
+    "RepairScope", "RepairStep", "ResilientTrainer", "RestoreOutcome",
+    "RootFailedError",
     "ShrinkCostModel", "ShrinkEngine", "ShrinkStrategy", "SparePool",
     "SparePoolExhausted", "SpareProvisioner", "StaleLegionError",
     "StepReport", "StragglerDetector",
@@ -134,6 +143,7 @@ __all__ = [
     "make_strategy", "make_topology", "make_train_step", "notice_fault",
     "optimal_k_linear", "optimal_k_quadratic", "optimal_kd",
     "eq3_s_of_k", "eq4_s_of_k",
-    "reassign", "register_strategy", "restore_for_substitute", "restore_rank",
+    "reassign", "register_strategy", "restore_for_substitute",
+    "restore_member_state", "restore_rank",
     "substitute_assign", "validate_plan",
 ]

@@ -31,8 +31,13 @@ the run (every ``InvariantCheck`` must hold):
     never spill past the primary's scope.
 
 Recovery setups reuse the serving presets (shrink / substitute /
-nonblocking / overlap — ``repro.serve.engine.recovery_preset``), so the
-chaos matrix and the serving benchmarks judge the same configurations.
+nonblocking / overlap / adaptive — ``repro.serve.engine.recovery_preset``),
+so the chaos matrix and the serving benchmarks judge the same
+configurations. Chaos clusters run with synthetic replica heartbeats
+(``ShardReplicator.heartbeat_every``): even without a checkpointer, small
+replica pushes ride the session ledger every other step, so the ledger
+conservation invariant is exercised with replication traffic in flight
+when a fault lands.
 The overlap column (background revoke-then-repair) adds its own invariant:
 **zero healthy-subtree sim-clock charge during a disjoint-scope repair** —
 ``ClusterClock.residual_seconds`` stays 0.0 for the whole campaign, i.e.
@@ -52,7 +57,7 @@ from repro.core.types import ChaosAction, FaultSource, NodeState, RecoveryAction
 __all__ = ["ChaosHarness", "ChaosReport", "InvariantCheck",
            "check_topology_coherence"]
 
-RECOVERIES = ("shrink", "substitute", "nonblocking", "overlap")
+RECOVERIES = ("shrink", "substitute", "nonblocking", "overlap", "adaptive")
 
 # synthetic latency fed for a SLOWDOWN target: the straggler detector's
 # min_latency floor times the event factor — above the floor and far above
@@ -73,7 +78,7 @@ class ChaosReport:
 
     scenario: str
     workload: str                        # train | serve
-    recovery: str            # shrink | substitute | nonblocking | overlap
+    recovery: str   # shrink | substitute | nonblocking | overlap | adaptive
     seed: int
     n_nodes: int
     checks: list[InvariantCheck] = field(default_factory=list)
@@ -395,6 +400,9 @@ class ChaosHarness:
         pol = self._policy_for(recovery)
         cluster = VirtualCluster(n_nodes, policy=pol,
                                  injector=campaign.injector())
+        # synthetic replica pushes every other step: the ledger conservation
+        # invariant must hold with replication traffic in flight
+        cluster.replicator.heartbeat_every = 2
         ex = LegioExecutor(cluster, work_fn=lambda node, shard, step: 1.0)
         checks: list[InvariantCheck] = []
         actions: list[RecoveryAction] = []
@@ -444,6 +452,7 @@ class ChaosHarness:
         pol = self._policy_for(recovery)
         cluster = VirtualCluster(n_nodes, policy=pol,
                                  injector=campaign.injector())
+        cluster.replicator.heartbeat_every = 2
         engine = ServeEngine(
             cluster, work_fn=lambda node, batch, step:
             {r.rid: r.rid for r in batch})

@@ -35,7 +35,7 @@ class RestartRecord:
     node: int
     legion: int
     step: int
-    source: str            # "checkpoint" | "peer-regen"
+    source: str            # "checkpoint" (store read) | "peer" (ring replica)
 
 
 class LegionCheckpointer:
@@ -47,6 +47,9 @@ class LegionCheckpointer:
             if async_writes else None
         self.keep = keep
         self.restarts: list[RestartRecord] = []
+        # ShardReplicator wired in by VirtualCluster: every save() also
+        # pushes the host-snapshotted shards to their POV-ring buddies
+        self.replicator = None
 
     # -- save ---------------------------------------------------------------------
 
@@ -66,6 +69,11 @@ class LegionCheckpointer:
         shards = self.shard_map_for(topo, state_of)
         meta = dict(meta or {})
         meta.setdefault("k", topo.k)
+        if self.replicator is not None:
+            # ring replication rides every checkpoint: the same host
+            # snapshot goes to each member's POV buddy (in-memory, posted
+            # through the session ledger — settles at the next boundary)
+            self.replicator.push_map(step, topo, shards)
         if self.async_writer is not None and not sync:
             return self.async_writer.save_async(step, shards, meta=meta)
         import time

@@ -52,7 +52,7 @@ from repro.core.substitute import (
     SpareProvisioner,
     SubstituteEngine,
     UnfilledSlot,
-    restore_for_substitute,
+    restore_member_state,
 )
 from repro.core.types import (
     BackgroundRepair,
@@ -127,6 +127,12 @@ class VirtualCluster:
         self.pending: list[PendingSubstitution] = []
         self.pipeline = FaultPipeline(self)
         self.background: list[BackgroundRepair] = []  # in-flight overlap windows
+        # peer-replicated shard checkpoints: lazy import keeps repro.core
+        # importable without pulling repro.checkpoint into the module graph
+        from repro.checkpoint.replicate import ShardReplicator
+        self.replicator = ShardReplicator(
+            link=self.link, enabled=self.policy.peer_replication,
+            cluster=self)
         self.checkpointer = checkpointer
         self.restored_state: dict[int, Any] = {}  # this step's splices only
         self._restored_step = -1
@@ -139,6 +145,21 @@ class VirtualCluster:
     def spares(self) -> list[int]:
         """Warm spares still available (legacy view of the pool)."""
         return self.spare_pool.available
+
+    @property
+    def checkpointer(self) -> Any:
+        return self._checkpointer
+
+    @checkpointer.setter
+    def checkpointer(self, value: Any) -> None:
+        """Attaching a checkpointer wires it to the cluster's replicator, so
+        every ``save()`` also pushes shards to their POV-ring buddies."""
+        self._checkpointer = value
+        if value is not None:
+            try:
+                value.replicator = self.replicator
+            except AttributeError:
+                pass     # frozen/slotted stand-in: store-only checkpoints
 
     # -- fault plumbing ---------------------------------------------------------
 
@@ -402,8 +423,10 @@ class VirtualCluster:
             t0 = time.perf_counter()
             self.topo.expand(p.legion, p.spare)
             self.detector.register(p.spare, self.clock.sim_seconds)
-            self._note_restored(p.spare, restore_for_substitute(
-                self.checkpointer, p.legion, p.failed))
+            # peer-first ladder: the replica settled (or re-homed) during
+            # the warmup window, so the splice warm-starts in O(shard)
+            self._note_restored(
+                p.spare, restore_member_state(self, p.legion, p.failed).state)
             self.plan = restore_rank(self.plan, p.spare, shards=p.shards)
             k = len(self.topo.legion_of(p.spare).members)
             steps = [RepairStep(op="substitute", comm=f"local_{p.legion}",

@@ -353,6 +353,25 @@ class LegionTopology:
     def povs(self) -> dict[int, list[int]]:
         return {lg.index: self.pov(lg.index) for lg in self.legions if lg.members}
 
+    def buddy_of(self, node: int) -> int | None:
+        """Replica buddy of ``node`` on the level-0 POV ring.
+
+        ``pov()`` already links every legion to the master of its successor;
+        the replica ring generalises that one edge to all members: the j-th
+        member of a legion is paired with the ``j mod |succ|``-th member of
+        the successor legion. Members are sorted ascending and the master is
+        the minimum, so the master's buddy is exactly the successor master
+        the POV comm names. Returns ``None`` when no out-of-legion buddy
+        exists (single surviving legion) — a whole-legion loss then has no
+        surviving replica holder and restores fall back to the store.
+        """
+        lg = self.legion_of(node)
+        succ = self.successor(lg.index)
+        if succ.index == lg.index or not succ.members:
+            return None
+        pos = lg.members.index(node)
+        return succ.members[pos % len(succ.members)]
+
     def n_communicators(self) -> int:
         """world + per-group comm + per-group POV at every ring level + the
         root comm. Every level has at most ceil(n / k^(level+1)) groups, so

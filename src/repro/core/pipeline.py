@@ -29,7 +29,9 @@ Each drain emits one terminal :class:`RecoveryAction` per disjoint scope —
 the scopes partition the agreed verdict, so every failed node still appears
 in exactly one terminal action. Per-stage wall latencies are recorded on
 every action and in ``traces`` (benchmarks/repair_time.py reads the
-breakdown).
+breakdown, and :class:`~repro.core.strategy.CostModelStrategy` fits its
+per-stage EWMA estimates from the same records — the pipeline is the
+adaptive scorer's only latency oracle).
 
 Invariants (asserted by tests/test_pipeline.py and tests/test_serve.py):
 

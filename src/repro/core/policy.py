@@ -64,7 +64,8 @@ def optimal_kd(s: int, depth: int) -> int:
     return max(2, round(s ** (1.0 / depth)))
 
 
-RECOVERY_MODES = ("shrink", "substitute", "substitute_then_shrink")
+RECOVERY_MODES = ("shrink", "substitute", "substitute_then_shrink",
+                  "adaptive")
 
 
 @dataclass(frozen=True)
@@ -90,8 +91,23 @@ class LegioPolicy:
     # spare into the failed node's legion slot. substitute_then_shrink
     # falls back to shrink once the pool is exhausted; bare substitute
     # treats exhaustion as fatal (SparePoolExhausted).
-    recovery_mode: str = "shrink"       # shrink | substitute | substitute_then_shrink
+    recovery_mode: str = "shrink"       # shrink | substitute |
+                                        # substitute_then_shrink | adaptive
     spare_fraction: float = 0.0         # provision ceil(f * n) warm spares
+    # --- adaptive recovery (CostModelStrategy): recovery_mode="adaptive"
+    # scores shrink / substitute / nonblocking / restart-from-checkpoint per
+    # fault from the engines' cost models plus per-stage pipeline latencies
+    # fitted online (EWMA over FaultPipeline.traces, keyed by verdict size)
+    # and dispatches the winner. adaptive_ewma_horizon is the EWMA window in
+    # drains (alpha = 2/(h+1)); adaptive_horizon_steps amortizes a shrink's
+    # lost capacity over the steps the run is expected to keep going.
+    adaptive_ewma_horizon: int = 8
+    adaptive_horizon_steps: int = 24
+    # --- peer-replicated shard checkpoints (checkpoint.replicate): every
+    # async checkpoint also pushes each member's host shard to its POV-ring
+    # buddy, so a substituted spare warm-starts from the surviving buddy in
+    # O(shard) — the store read remains the correlated-loss fallback.
+    peer_replication: bool = True
     # non-blocking flavor (Bouteiller & Bosilca): after the fault step,
     # spare_warmup_steps steps run shrunk while the substitute warms up;
     # the topology then re-expands at the next step boundary.
@@ -153,6 +169,10 @@ class LegioPolicy:
             raise ValueError(
                 f"recovery_mode must be one of {RECOVERY_MODES}, "
                 f"got {self.recovery_mode!r}")
+        if self.adaptive_ewma_horizon < 1:
+            raise ValueError("adaptive_ewma_horizon must be >= 1")
+        if self.adaptive_horizon_steps < 1:
+            raise ValueError("adaptive_horizon_steps must be >= 1")
         if self.spare_refill_watermark < 0:
             raise ValueError("spare_refill_watermark must be >= 0")
         if self.spare_provision_delay_steps < 0:
@@ -236,6 +256,8 @@ class LegioPolicy:
         """Registry key of the RecoveryStrategy this policy composes
         (see :mod:`repro.core.strategy`). New strategies register under new
         keys; the ladder this replaces lived in ``VirtualCluster.repair``."""
+        if self.recovery_mode == "adaptive":
+            return "adaptive"
         if not self.substitution_enabled:
             return "shrink"
         if self.nonblocking_substitution:

@@ -69,6 +69,7 @@ tests/test_substitute.py, and tests/test_serve.py):
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Protocol, runtime_checkable
 
 from repro.core.batch import (
@@ -82,7 +83,7 @@ from repro.core.substitute import (
     PendingSubstitution,
     SparePoolExhausted,
     UnfilledSlot,
-    restore_for_substitute,
+    restore_member_state,
 )
 from repro.core.types import RepairReport, RepairStep
 
@@ -191,10 +192,19 @@ class SubstituteStrategy(_PolicyBound):
         homes = {n: cluster.topo.home.get(n) for n in verdict}
         report = cluster.substitute.repair(cluster.topo, verdict,
                                            cluster.spare_pool)
+        restore_steps = {st.participants[0]: st for st in report.steps
+                         if st.op == "restore" and st.participants}
         for failed, spare in report.substitutions:
             cluster.detector.register(spare, cluster.clock.sim_seconds)
-            cluster._note_restored(spare, restore_for_substitute(
-                cluster.checkpointer, cluster.topo.home[spare], failed))
+            outcome = restore_member_state(cluster, cluster.topo.home[spare],
+                                           failed)
+            cluster._note_restored(spare, outcome.state)
+            # a peer hit re-costs the splice's restore stage: one O(shard)
+            # cross-member transfer instead of the O(model) store read
+            step = restore_steps.get(spare)
+            if step is not None and outcome.source == "peer":
+                step.cost_units = outcome.cost_seconds
+        report.model_cost = sum(st.cost_units for st in report.steps)
         cluster.plan = substitute_assign(cluster.plan, report.substitution_map)
         if report.unfilled:
             cluster.plan = reassign(cluster.plan, set(report.unfilled),
@@ -246,3 +256,196 @@ class NonblockingSubstituteStrategy(_PolicyBound):
         report.mode = ("substitute(nonblocking)" if scheduled == len(homes)
                        else "substitute_then_shrink")
         return report
+
+
+@dataclass(frozen=True)
+class AdaptiveDecision:
+    """One :class:`CostModelStrategy` dispatch, fully explained: every
+    candidate's estimated recovery seconds and the winner that ran."""
+
+    step: int
+    verdict: tuple[int, ...]
+    scores: dict[str, float] = field(default_factory=dict)
+    chosen: str = "shrink"
+    # EWMA-fitted detect/notice/agree/plan seconds for this verdict size —
+    # paid identically by every candidate, so recorded rather than scored
+    pipeline_overhead: float = 0.0
+
+
+@register_strategy("adaptive")
+class CostModelStrategy(_PolicyBound):
+    """Adaptive recovery: score every registered mode per fault, run the
+    cheapest (``recovery_mode="adaptive"``).
+
+    The scorer combines three ingredients, all of them live state rather
+    than configuration:
+
+      * the engines' **pure plans** — ``ShrinkEngine.plan`` and
+        ``SubstituteEngine.plan`` are dry-run against the current topology,
+        so the structural S(x) costs scored are exactly the costs the
+        winning strategy will charge;
+      * the **restore ladder's actual path** — a failed node whose POV-ring
+        buddy holds a live replica is scored at the O(shard) link-model
+        transfer; otherwise at the store read (``restore_seconds``), the
+        same decision :func:`~repro.core.substitute.restore_member_state`
+        will make;
+      * **online-fitted pipeline latencies** — per-stage wall seconds from
+        ``FaultPipeline.traces``, EWMA-smoothed per verdict-size bucket
+        (alpha = 2/(adaptive_ewma_horizon+1)). The non-apply stages are paid
+        identically by every candidate, so they ride on the decision record
+        (``pipeline_overhead``) instead of perturbing the argmin.
+
+    Capacity lost to a shrink is charged as opportunity cost: a slot left
+    shrunk forfeits its share of cluster throughput
+    (``step_sim_seconds / size``) for ``adaptive_horizon_steps`` steps —
+    the knob that decides when splicing a spare beats running degraded.
+
+    The rollback strawman (snippet-1-style CONTROL_POINT loop: every
+    survivor rolls back to the last checkpoint and re-executes) is scored
+    as the ``"restart"`` baseline on every decision, but never dispatched —
+    restart-only-failed dominates it by construction, and the recorded
+    margin is the evidence (benchmarks/recovery_cost.py plots it).
+
+    Inner strategies are composed per dispatch with non-strict policies
+    (``substitute_then_shrink``), so the adaptive mode NEVER raises
+    :class:`SparePoolExhausted` — an empty pool simply prices substitution
+    at shrink-or-worse and the tie-break prefers shrink. Dispatched shrinks
+    pass ``regrow=False``: choosing shrink means the scorer judged spares
+    not worth spending here.
+    """
+
+    #: modes the scorer may dispatch ("restart" is baseline-only)
+    DISPATCHABLE = ("shrink", "substitute", "substitute_nonblocking")
+
+    def __init__(self, policy: LegioPolicy):
+        super().__init__(policy)
+        self.decisions: list[AdaptiveDecision] = []
+        self._ewma: dict[tuple[str, int], float] = {}  # (stage, bucket)
+        self._seen_traces = 0
+
+    # -- online fitting from pipeline traces ----------------------------------
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Power-of-two verdict-size bucket (1-node faults dominate; rack
+        drains land in coarser buckets with their own latency profile)."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _ingest(self, cluster: "VirtualCluster") -> None:
+        alpha = 2.0 / (self.policy.adaptive_ewma_horizon + 1.0)
+        traces = cluster.pipeline.traces
+        for tr in traces[self._seen_traces:]:
+            bucket = self._bucket(max(1, len(tr.verdict)))
+            for stage, secs in tr.stage_seconds.items():
+                key = (stage, bucket)
+                prev = self._ewma.get(key)
+                self._ewma[key] = secs if prev is None else \
+                    prev + alpha * (secs - prev)
+        self._seen_traces = len(traces)
+
+    def fitted_overhead(self, n_failed: int) -> float:
+        """EWMA detect/notice/agree/plan seconds for an n-node verdict."""
+        bucket = self._bucket(max(1, n_failed))
+        return sum(secs for (stage, b), secs in self._ewma.items()
+                   if b == bucket and stage != "apply")
+
+    # -- scoring ---------------------------------------------------------------
+
+    def _restore_cost(self, cluster: "VirtualCluster", node: int) -> float:
+        """What the restore ladder would charge for ``node`` right now."""
+        store_cost = cluster.substitute.cost.restore_seconds
+        replicator = getattr(cluster, "replicator", None)
+        if replicator is None or not replicator.enabled:
+            return store_cost
+        record = replicator.replicas.get(node)
+        if record is None or record.holder in cluster.failed \
+                or record.holder not in cluster.topo.nodes:
+            return store_cost
+        return replicator.transfer_seconds(record.nbytes)
+
+    def score(self, cluster: "VirtualCluster",
+              verdict: set[int]) -> dict[str, float]:
+        """Estimated total recovery seconds per candidate mode."""
+        pol, topo = self.policy, cluster.topo
+        present = [n for n in sorted(verdict)
+                   if n in topo.home and n in topo.nodes]
+        size = max(1, topo.size)
+        # opportunity cost of one slot-step: a shrunk slot forfeits its
+        # share of cluster throughput until the horizon runs out
+        slot_step = pol.step_sim_seconds / size
+        horizon = pol.adaptive_horizon_steps
+
+        teardown = sum(st.cost_units
+                       for st in cluster.shrink.plan(topo, set(verdict)))
+        spares = list(cluster.spare_pool.available)
+        filled = min(len(present), len(spares))
+        unfilled = len(present) - filled
+
+        scores: dict[str, float] = {}
+        scores["shrink"] = teardown + len(present) * slot_step * horizon
+
+        # blocking substitution: the engine's own (pure) plan, each restore
+        # stage re-costed the way the ladder would actually charge it
+        hypo = dict(zip(present, spares))
+        spare_of = {s: n for n, s in hypo.items()}
+        sub = 0.0
+        for st in cluster.substitute.plan(topo, set(verdict), hypo):
+            if st.op == "restore" and st.participants:
+                sub += self._restore_cost(cluster, spare_of[st.participants[0]])
+            else:
+                sub += st.cost_units
+        scores["substitute"] = sub + unfilled * slot_step * horizon
+
+        # non-blocking: shrink lands now, the splice charge lands after
+        # warmup (restore overlaps the warmup — uncharged, see
+        # VirtualCluster.poll_substitutions); filled slots run shrunk
+        # through the warmup window only
+        warmup = min(1 + pol.spare_warmup_steps, horizon)
+        splices = filled * cluster.substitute.cost.splice_cost(
+            max(1, topo.k) - 1)
+        scores["substitute_nonblocking"] = (
+            teardown + splices
+            + filled * slot_step * warmup
+            + unfilled * slot_step * horizon)
+
+        # restart-from-checkpoint baseline: every survivor rolls back to
+        # the last snapshot (full O(model) restore) and re-executes the
+        # lost steps; the dead slots still shrink away
+        ck = cluster.checkpointer
+        last = ck.latest_step() if ck is not None else None
+        lost = cluster._step - last if last is not None else cluster._step
+        scores["restart"] = (
+            teardown
+            + max(0, lost) * pol.step_sim_seconds
+            + cluster.substitute.cost.restore_seconds * size
+            + len(present) * slot_step * horizon)
+        return scores
+
+    # -- dispatch --------------------------------------------------------------
+
+    def repair(self, cluster: "VirtualCluster",
+               verdict: set[int]) -> RepairReport:
+        self._ingest(cluster)
+        scores = self.score(cluster, verdict)
+        # ties prefer the earlier entry — with an empty pool every
+        # substitution candidate collapses to shrink's score, and shrink
+        # wins without touching the provisioner
+        chosen = min(self.DISPATCHABLE, key=lambda m: scores[m])
+        self.decisions.append(AdaptiveDecision(
+            step=cluster._step, verdict=tuple(sorted(verdict)),
+            scores=scores, chosen=chosen,
+            pipeline_overhead=self.fitted_overhead(len(verdict))))
+        if chosen == "shrink":
+            inner = replace(self.policy, recovery_mode="shrink")
+            return ShrinkStrategy(inner).repair(cluster, verdict,
+                                                regrow=False)
+        inner = replace(
+            self.policy, recovery_mode="substitute_then_shrink",
+            nonblocking_substitution=(chosen == "substitute_nonblocking"))
+        if chosen == "substitute_nonblocking":
+            return NonblockingSubstituteStrategy(inner).repair(cluster,
+                                                               verdict)
+        return SubstituteStrategy(inner).repair(cluster, verdict)

@@ -357,3 +357,55 @@ def restore_for_substitute(checkpointer, legion: int, failed: int,
                                                   template=template)
     except (FileNotFoundError, KeyError):
         return None
+
+
+@dataclass(frozen=True)
+class RestoreOutcome:
+    """What the restore ladder produced for one splice."""
+
+    state: PyTree | None
+    source: str              # "peer" | "checkpoint" | "none"
+    cost_seconds: float      # simulated warm-up charge for the path taken
+
+
+def restore_member_state(cluster, legion: int, failed: int, *,
+                         template: PyTree | None = None) -> RestoreOutcome:
+    """Peer-first restore ladder for a substituted rank (O(shard) fast path).
+
+    1. Ask the dead member's surviving POV-ring buddy for the in-memory
+       replica (``cluster.replicator``): a dict lookup plus one simulated
+       cross-member transfer — O(shard), independent of model and cluster
+       size — with the replica's checksums re-verified before use.
+    2. On correlated loss (buddy dead too — a rack outage spanning adjacent
+       legions), a missing replica, or a checksum mismatch, fall back to the
+       O(model-size) store read (:func:`restore_for_substitute`).
+
+    ``RestartRecord.source`` distinguishes the paths ("peer" vs
+    "checkpoint"); ``cost_seconds`` is what the splice's restore stage
+    should charge — the link-model transfer for a peer hit, the cost
+    model's ``restore_seconds`` for a store read.
+    """
+    from repro.checkpoint.replicate import (
+        ReplicaIntegrityError,
+        ReplicaUnavailable,
+    )
+    from repro.core.cr import RestartRecord
+
+    replicator = getattr(cluster, "replicator", None)
+    if replicator is not None and replicator.enabled:
+        try:
+            state, served = replicator.restore(failed, cluster.topo,
+                                               cluster.failed)
+        except (ReplicaUnavailable, ReplicaIntegrityError):
+            pass                     # fall through to the store
+        else:
+            if cluster.checkpointer is not None:
+                cluster.checkpointer.restarts.append(RestartRecord(
+                    node=failed, legion=legion, step=served.step,
+                    source="peer"))
+            return RestoreOutcome(state, "peer", served.transfer_seconds)
+    state = restore_for_substitute(cluster.checkpointer, legion, failed,
+                                   template=template)
+    return RestoreOutcome(
+        state, "checkpoint" if state is not None else "none",
+        cluster.substitute.cost.restore_seconds)

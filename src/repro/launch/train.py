@@ -19,6 +19,7 @@ import sys
 from repro.configs.base import TrainConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core import (
+    RECOVERY_MODES,
     FaultInjector,
     LegionCheckpointer,
     LegioPolicy,
@@ -57,6 +58,14 @@ def main(argv: list[str] | None = None) -> int:
                     default="ignore")
     ap.add_argument("--spares", type=int, default=0,
                     help="standby nodes for elastic regrow")
+    ap.add_argument("--recovery", choices=RECOVERY_MODES, default="shrink",
+                    help="recovery mode; 'adaptive' scores shrink/substitute/"
+                         "nonblocking per fault (CostModelStrategy)")
+    ap.add_argument("--spare-fraction", type=float, default=0.0,
+                    help="provision ceil(f*n) warm spares for substitution")
+    ap.add_argument("--no-peer-replication", action="store_true",
+                    help="disable POV-ring replica checkpoints (store-only "
+                         "restores)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--json", action="store_true", help="JSON report to stdout")
@@ -79,6 +88,9 @@ def main(argv: list[str] | None = None) -> int:
         batch_policy=args.batch_policy,
         root_failure_policy=args.root_policy,
         spare_nodes=args.spares,
+        recovery_mode=args.recovery,
+        spare_fraction=args.spare_fraction,
+        peer_replication=not args.no_peer_replication,
     )
     cluster = VirtualCluster(
         args.nodes, policy=policy, injector=parse_failures(args.fail))

@@ -130,6 +130,13 @@ class Session:
         cl = self.cluster
         reconciled = tuple(br.scope for br in cl.reconcile_repairs())
         respawned = cl.poll_provisioner(step)
+        replicator = getattr(cl, "replicator", None)
+        if replicator is not None:
+            # settle in-flight replica pushes and re-home replicas whose
+            # buddies changed — BEFORE the splices poll, so a replica that
+            # arrived during the warmup window serves this boundary's
+            # restores in O(shard)
+            replicator.tick(cl.topo, cl.failed, step)
         expansions = cl.poll_substitutions(step)
         return BoundaryReport(step=step, respawned=tuple(respawned),
                               expansions=tuple(expansions),

@@ -77,7 +77,8 @@ from repro.serve.traffic import Arrival
 # work_fn(node, batch, step) -> {rid: result}
 WorkFn = Callable[[int, list[Request], int], dict[int, Any]]
 
-RECOVERY_PRESETS = ("shrink", "substitute", "nonblocking", "overlap")
+RECOVERY_PRESETS = ("shrink", "substitute", "nonblocking", "overlap",
+                    "adaptive")
 
 
 def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
@@ -87,7 +88,9 @@ def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
     shrink with background (revoke-then-repair) windows: a torn scope's
     repair happens concurrently on the sim clock while healthy legions
     keep serving — continuous batching never parks their slots on a
-    remote scope's repair."""
+    remote scope's repair. ``adaptive`` scores shrink / substitute /
+    nonblocking per fault from the live cost models (CostModelStrategy)
+    and keeps background windows available to whichever mode wins."""
     presets = {
         "shrink": dict(recovery_mode="shrink"),
         "substitute": dict(recovery_mode="substitute_then_shrink",
@@ -96,6 +99,9 @@ def recovery_preset(name: str, *, spare_fraction: float = 0.25) -> dict:
                             spare_fraction=spare_fraction,
                             nonblocking_substitution=True),
         "overlap": dict(recovery_mode="shrink", repair_overlap=True),
+        "adaptive": dict(recovery_mode="adaptive",
+                         spare_fraction=spare_fraction,
+                         repair_overlap=True),
     }
     return presets[name]
 

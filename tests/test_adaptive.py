@@ -1,0 +1,165 @@
+"""Adaptive recovery (CostModelStrategy): scoring, dispatch, EWMA fitting."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModelStrategy,
+    FaultInjector,
+    LegionCheckpointer,
+    LegioExecutor,
+    LegioPolicy,
+    VirtualCluster,
+    available_strategies,
+    make_strategy,
+)
+
+
+def work(node, shard, step):
+    return np.ones(4) * (shard + 1)
+
+
+def adaptive_policy(**kw):
+    kw.setdefault("legion_size", 4)
+    kw.setdefault("recovery_mode", "adaptive")
+    return LegioPolicy(**kw)
+
+
+SCORED = ("shrink", "substitute", "substitute_nonblocking", "restart")
+
+
+def test_registered_and_selected_by_policy():
+    assert "adaptive" in available_strategies()
+    strat = make_strategy(adaptive_policy())
+    assert isinstance(strat, CostModelStrategy)
+    assert strat.overlap_safe            # inherits the built-ins' guarantee
+
+
+def test_every_candidate_scored_restart_never_dispatched():
+    inj = FaultInjector.at([(1, 5), (3, 9)])
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_fraction=0.25),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(5)
+    decisions = cl.strategy.decisions
+    assert len(decisions) == 2
+    for d in decisions:
+        assert set(d.scores) == set(SCORED)
+        assert d.chosen in CostModelStrategy.DISPATCHABLE
+        assert d.scores[d.chosen] == min(d.scores[m]
+                                         for m in CostModelStrategy.DISPATCHABLE)
+
+
+def test_spares_available_substitution_wins():
+    """One dead worker, warm pool, default horizon: paying the splice beats
+    forfeiting the slot's throughput for adaptive_horizon_steps."""
+    inj = FaultInjector.at([(2, 5)])
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_fraction=0.25),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(5)
+    d = cl.strategy.decisions[-1]
+    assert d.chosen in ("substitute", "substitute_nonblocking")
+    assert d.verdict == (5,)
+    assert cl.topo.size == 16            # capacity restored
+    assert cl.plan.active_shards == 16
+
+
+def test_empty_pool_collapses_to_shrink_never_raises():
+    """No spares: the substitution candidates price at shrink-or-worse and
+    the tie-break prefers shrink — adaptive never raises
+    SparePoolExhausted and never schedules a splice."""
+    inj = FaultInjector.at([(1, 5), (2, 9)])
+    cl = VirtualCluster(16, policy=adaptive_policy(), injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(5)                            # would raise under strict substitute
+    assert [d.chosen for d in cl.strategy.decisions] == ["shrink", "shrink"]
+    assert cl.topo.size == 14 and cl.pending == []
+    for d in cl.strategy.decisions:
+        assert d.scores["shrink"] <= d.scores["substitute"]
+
+
+def test_pool_drained_mid_campaign_degrades_gracefully():
+    """More faults than spares: early faults substitute, later ones shrink —
+    the scorer re-reads the live pool every drain."""
+    inj = FaultInjector.at([(1, 5), (3, 9), (5, 13)])
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_nodes=1),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(7)
+    chosen = [d.chosen for d in cl.strategy.decisions]
+    assert chosen[0] in ("substitute", "substitute_nonblocking")
+    assert chosen[1:] == ["shrink", "shrink"]
+    assert cl.spare_pool.exhausted
+
+
+def test_short_horizon_prefers_shrink():
+    """Near end-of-campaign (tiny adaptive_horizon_steps) the capacity a
+    shrink forfeits is cheap — shrink wins even with a warm pool."""
+    inj = FaultInjector.at([(2, 5)])
+    cl = VirtualCluster(16, policy=adaptive_policy(
+        spare_fraction=0.25, adaptive_horizon_steps=1), injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(4)
+    assert cl.strategy.decisions[-1].chosen == "shrink"
+    assert len(cl.spare_pool) == 4       # no spare spent
+
+
+def test_restore_cost_is_peer_aware(tmp_path):
+    """A live ring replica prices the restore at the O(shard) transfer; a
+    dead buddy (or no replica) prices it at the store read."""
+    ck = LegionCheckpointer(str(tmp_path), async_writes=False)
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_fraction=0.25),
+                        checkpointer=ck)
+    strat = cl.strategy
+    store_cost = cl.substitute.cost.restore_seconds
+    assert strat._restore_cost(cl, 5) == store_cost      # nothing pushed yet
+    ck.save(0, cl.topo, lambda n: {"w": np.full(4, float(n))}, sync=True)
+    assert strat._restore_cost(cl, 5) < store_cost       # replica committed
+    buddy = cl.topo.buddy_of(5)
+    cl.failed.add(buddy)
+    assert strat._restore_cost(cl, 5) == store_cost      # correlated loss
+    cl.failed.discard(buddy)
+    # the peer discount shows up in the substitute score itself
+    with_peer = strat.score(cl, {5})
+    cl.replicator.drop(5)
+    without = strat.score(cl, {5})
+    assert with_peer["substitute"] < without["substitute"]
+
+
+def test_ewma_ingest_tracks_pipeline_traces():
+    inj = FaultInjector.at([(1, 5), (3, 9)])
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_fraction=0.25),
+                        injector=inj)
+    ex = LegioExecutor(cl, work)
+    ex.run(5)
+    strat = cl.strategy
+    # _ingest runs at repair time, BEFORE the current drain's own trace is
+    # appended — each drain fits on everything up to the previous one
+    assert strat._seen_traces == len(cl.pipeline.traces) - 1 > 0
+    # single-node verdicts land in bucket 1 with the non-apply stages fitted
+    stages = {stage for (stage, bucket) in strat._ewma if bucket == 1}
+    assert {"detect", "notice", "agree", "plan"} <= stages
+    assert strat.fitted_overhead(1) >= 0.0
+    # the recorded decision carries the fit, not the argmin
+    d = cl.strategy.decisions[-1]
+    assert d.pipeline_overhead == pytest.approx(strat.fitted_overhead(1))
+
+
+def test_ewma_bucket_is_power_of_two():
+    assert [CostModelStrategy._bucket(n) for n in (1, 2, 3, 5, 8, 9)] == \
+        [1, 2, 4, 8, 8, 16]
+
+
+def test_restart_baseline_dominated_with_fresh_checkpoint(tmp_path):
+    """With a checkpoint one step old, restart still loses: it pays every
+    survivor's store restore while the dispatched mode restores one shard."""
+    ck = LegionCheckpointer(str(tmp_path), async_writes=False)
+    inj = FaultInjector.at([(2, 5)])
+    cl = VirtualCluster(16, policy=adaptive_policy(spare_fraction=0.25),
+                        injector=inj, checkpointer=ck)
+    ex = LegioExecutor(cl, work)
+    ex.run(2)
+    ck.save(1, cl.topo, lambda n: {"w": np.full(4, float(n))}, sync=True)
+    ex.run(3)
+    d = cl.strategy.decisions[-1]
+    assert d.scores["restart"] > d.scores[d.chosen]

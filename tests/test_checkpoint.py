@@ -88,6 +88,44 @@ def test_async_checkpointer(tmp_path):
     ck.close()
 
 
+def test_gc_sweeps_partial_dirs_and_never_counts_them(tmp_path):
+    """A crashed write leaves a manifest-less step dir. Retention must count
+    complete steps only (a partial dir never consumes a keep slot) and the
+    partial dir itself is swept — files and all."""
+    d = str(tmp_path)
+    ck = store.AsyncCheckpointer(d, keep=2)
+    ck.save_async(1, shards_for(range(2)))
+    ck.wait()
+    # two dead partial dirs, one with stranded member files inside
+    os.makedirs(os.path.join(d, "step_000007"))
+    stranded = os.path.join(d, "step_000009", "legion_00")
+    os.makedirs(stranded)
+    with open(os.path.join(stranded, "member_000.npz"), "wb") as f:
+        f.write(b"garbage")
+    ck.save_async(2, shards_for(range(2)))
+    ck.save_async(3, shards_for(range(2)))
+    ck.wait()
+    steps = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    # partials gone; the keep=2 newest COMPLETE steps survive — step 2 was
+    # not evicted to make room for a partial
+    assert steps == ["step_000002", "step_000003"]
+    ck.close()
+
+
+def test_restore_member_threads_preparsed_manifest(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 4, shards_for(range(4)))
+    sdir = os.path.join(d, "step_000004")
+    manifest = store._read_manifest(sdir)
+    one = store.restore_member(d, 4, legion=1, node=3, manifest=manifest)
+    np.testing.assert_array_equal(np.asarray(one["step"]), 4)
+    # a stale manifest is trusted as handed in: missing rows raise the same
+    # FileNotFoundError the unthreaded path would
+    manifest.files.pop(store.member_relpath(1, 3))
+    with pytest.raises(FileNotFoundError):
+        store.restore_member(d, 4, legion=1, node=3, manifest=manifest)
+
+
 def test_legion_dirs_are_self_contained(tmp_path):
     """No global file: each legion's data lives under its own directory."""
     d = str(tmp_path)
