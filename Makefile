@@ -35,11 +35,11 @@ docs:
 # + MPI-facade transparency overhead + the correlated-failure invariant
 # matrix + the serving load curve + peer-restore/adaptive recovery costs
 bench-quick:
-	$(PYTHON) -m benchmarks.run fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost
+	$(PYTHON) -m benchmarks.run fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost dataplane
 
-# same smoke, plus machine-readable results in BENCH_PR9.json (CI artifact)
+# same smoke, plus machine-readable results in BENCH_PR10.json (CI artifact)
 bench-json:
-	$(PYTHON) -m benchmarks.run --json fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost
+	$(PYTHON) -m benchmarks.run --json fig10 overlap optimal_k hierarchy_scaling interposition chaos serve recovery_cost dataplane
 
 # the transparency claim, live: an unmodified MPI-shaped loop surviving faults
 mpi-demo:

@@ -1,0 +1,159 @@
+"""Data-plane roofline: scheduled (alpha-beta) vs measured collective time.
+
+For each (op x payload x participants) cell, runs the same scheduled
+collective on two clusters that differ only in ``LegioPolicy.data_plane``
+("sim" vs "auto") and reports the control plane's alpha-beta estimate next
+to the measured wall time of each backend. On a single-device host the
+"auto" cluster resolves to the sim plane (the graceful skip — the CI step
+that forces 8 host devices is what exercises the jax column for real).
+
+Asserts are structural, pinning the seam's parity contract:
+  - byte-identical result dicts between backends (integer-exact payloads);
+  - identical stage lists (schedules and their clock charges never depend
+    on the backend);
+  - the compression hop moves fewer wire bytes than raw on BOTH paths, with
+    the accounting identical by construction (it lives in the control
+    plane) — and still byte-identical results (host-computed scale, see
+    kernels/quantize.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.executor import VirtualCluster
+from repro.core.policy import LegioPolicy
+from repro.optim import compression as C
+
+PAYLOAD_ELEMS = (256, 16_384, 262_144)          # 1 KiB / 64 KiB / 1 MiB f32
+PARTICIPANTS = (4, 8, 16)
+REPEATS = 2
+
+
+def _contributions(nodes, n_elems: int) -> dict[int, np.ndarray]:
+    """Integer-exact f32 payloads: summation order cannot matter, so both
+    backends must agree bit-for-bit."""
+    base = (np.arange(n_elems, dtype=np.float32) % 13.0) - 6.0
+    return {node: base * np.float32(i + 1)
+            for i, node in enumerate(sorted(nodes))}
+
+
+def _pair(n_nodes: int, compression: str = "none"
+          ) -> tuple[VirtualCluster, VirtualCluster]:
+    def mk(plane):
+        return VirtualCluster(n_nodes, policy=LegioPolicy(
+            data_plane=plane, grad_compression=compression))
+    return mk("sim"), mk("auto")
+
+
+def _run(cluster: VirtualCluster, op: str, n_elems: int):
+    coll = cluster.collectives()
+    nodes = cluster.topo.nodes
+    contrib = _contributions(nodes, n_elems)
+    root = sorted(nodes)[0]
+    def fn():
+        if op == "allreduce":
+            return coll.allreduce(contrib, np.add)
+        if op == "reduce":
+            return coll.reduce(root, contrib, np.add)
+        return coll.bcast(root, contrib[root])
+    res = fn()                      # asserted-on result (also the warmup)
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        fn()
+    wall = (time.perf_counter() - t0) / REPEATS
+    return res, wall
+
+
+def _assert_parity(res_sim, res_jax, cell: str) -> None:
+    assert res_sim.stages == res_jax.stages, \
+        f"{cell}: stage lists diverged between backends"
+    assert res_sim.sim_seconds == res_jax.sim_seconds, \
+        f"{cell}: clock charges diverged between backends"
+    assert set(res_sim.data) == set(res_jax.data), \
+        f"{cell}: result membership diverged"
+    for node in res_sim.data:
+        a, b = np.asarray(res_sim.data[node]), np.asarray(res_jax.data[node])
+        assert a.dtype == b.dtype and a.tobytes() == b.tobytes(), \
+            f"{cell}: node {node} payload not byte-identical"
+
+
+def main() -> dict:
+    rows: list[dict] = []
+
+    # -- uncompressed sweep: op x payload x participants ---------------------
+    for n_nodes in PARTICIPANTS:
+        sim_cl, jax_cl = _pair(n_nodes)
+        backend = jax_cl.dataplane.name
+        for op in ("allreduce", "bcast", "reduce"):
+            for n_elems in PAYLOAD_ELEMS:
+                cell = f"{op}/{n_elems}el/{n_nodes}n"
+                res_s, wall_s = _run(sim_cl, op, n_elems)
+                res_j, wall_j = _run(jax_cl, op, n_elems)
+                _assert_parity(res_s, res_j, cell)
+                rows.append({
+                    "op": op, "elems": n_elems,
+                    "payload_bytes": n_elems * 4,
+                    "participants": n_nodes,
+                    "backend": backend,
+                    "alpha_beta_ms": res_s.sim_seconds * 1e3,
+                    "sim_wall_ms": wall_s * 1e3,
+                    "measured_wall_ms": wall_j * 1e3,
+                    "stages": len(res_s.stages),
+                })
+
+    # -- compression hop: hierarchical topology so a cross hop exists --------
+    comp_rows: list[dict] = []
+    n_nodes = max(PARTICIPANTS)
+    raw_res = None
+    for scheme in ("none", "int8", "topk"):
+        for n_elems in PAYLOAD_ELEMS:
+            # fresh pair per payload: error-feedback residuals are
+            # shape-bound per master
+            sim_cl, jax_cl = _pair(n_nodes, compression=scheme)
+            assert sim_cl.topo.depth >= 2, \
+                "compression sweep needs a cross-legion hop"
+            cell = f"allreduce+{scheme}/{n_elems}el/{n_nodes}n"
+            res_s, wall_s = _run(sim_cl, "allreduce", n_elems)
+            res_j, wall_j = _run(jax_cl, "allreduce", n_elems)
+            _assert_parity(res_s, res_j, cell)
+            g = np.zeros(n_elems, np.float32)
+            wire = C.compressed_bytes(g, scheme,
+                                      sim_cl.policy.topk_fraction)
+            comp_rows.append({
+                "op": f"allreduce+{scheme}", "elems": n_elems,
+                "raw_bytes": n_elems * 4, "wire_bytes": wire,
+                "participants": n_nodes,
+                "backend": jax_cl.dataplane.name,
+                "alpha_beta_ms": res_s.sim_seconds * 1e3,
+                "sim_wall_ms": wall_s * 1e3,
+                "measured_wall_ms": wall_j * 1e3,
+            })
+            if scheme == "none":
+                raw_res = raw_res or {}
+                raw_res[n_elems] = res_s.sim_seconds
+            else:
+                assert wire < n_elems * 4, \
+                    f"{cell}: compression did not shrink the wire"
+                assert res_s.sim_seconds < raw_res[n_elems], \
+                    f"{cell}: cheaper wire must show in the clock charge"
+
+    emit(rows, "scheduled vs measured collective time per op x payload x "
+               "participants")
+    emit(comp_rows, "compression hop: wire bytes + clock charge, both "
+                    "backends (identical accounting by construction)")
+    backend = comp_rows[-1]["backend"]
+    if backend == "sim":
+        print("# single-device host: auto resolved to the sim plane "
+              "(jax column == second sim run); force devices via "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "for a real jax column")
+    print(f"# parity: {len(rows) + len(comp_rows)} cells byte-identical "
+          f"across backends (backend={backend})")
+    return {"cells": rows, "compression": comp_rows, "backend": backend}
+
+
+if __name__ == "__main__":
+    main()

@@ -40,20 +40,25 @@ def load(dirpath: Path) -> list[dict]:
     return rows
 
 
-def main() -> None:
-    dirpath = Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT_DIR
-    rows = load(dirpath)
+def main(dirpath: "str | Path | None" = None) -> dict:
+    """Emit the roofline table from ``dirpath`` (default
+    experiments/dryrun). Called by benchmarks.run with its ``--dryrun-dir``
+    value; skips with a message — not an error — when no artifacts exist."""
+    dirpath = Path(dirpath) if dirpath else DEFAULT_DIR
+    rows = load(dirpath) if dirpath.is_dir() else []
     if not rows:
-        print(f"# no dry-run artifacts in {dirpath} — run "
-              f"`python -m repro.launch.dryrun --all --both-meshes` first")
-        return
+        msg = (f"no dry-run artifacts in {dirpath} — run "
+               f"`python -m repro.launch.dryrun --all --both-meshes` first")
+        print(f"# {msg}")
+        return {"skipped": msg}
     emit(rows, f"roofline terms per (arch x shape x mesh) from {dirpath}")
     doms = {}
     for r in rows:
         doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
     fits = sum(r["fits_v5e_16G"] for r in rows)
     print(f"# dominant-term census: {doms}; {fits}/{len(rows)} cells fit 16G HBM")
+    return {"rows": len(rows), "dominant": doms, "fits_16G": fits}
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

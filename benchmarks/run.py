@@ -4,12 +4,14 @@
   PYTHONPATH=src python -m benchmarks.run fig10 ep   # substring filter
   PYTHONPATH=src python -m benchmarks.run --json fig10 optimal_k hierarchy
                                                      # + machine-readable
-                                                     #   BENCH_PR9.json
+                                                     #   BENCH_PR10.json
 
 ``--json`` records per-suite status/wall-seconds (and whatever dict a
-suite's ``main()`` returns) to ``BENCH_PR9.json`` — the CI artifact. The
+suite's ``main()`` returns) to ``BENCH_PR10.json`` — the CI artifact. The
 asserts inside the suites stay structural (the bench-smoke convention);
-the JSON is for dashboards, not pass/fail.
+the JSON is for dashboards, not pass/fail. ``--dryrun-dir PATH`` points the
+roofline suite at a directory of ``repro.launch.dryrun`` artifacts (it
+skips with a message when none exist).
 """
 from __future__ import annotations
 
@@ -37,18 +39,29 @@ SUITES = [
     ("interposition_overhead", "benchmarks.interposition_overhead",
      "§VI transparency overhead"),
     ("roofline", "benchmarks.roofline", "EXPERIMENTS §Roofline"),
+    ("dataplane_roofline", "benchmarks.dataplane_roofline",
+     "beyond-paper data-plane seam"),
     ("chaos_campaign", "benchmarks.chaos_campaign",
      "§III-V fault-model zoo"),
     ("recovery_cost", "benchmarks.recovery_cost",
      "beyond-paper peer restore + adaptive recovery"),
 ]
 
-JSON_PATH = "BENCH_PR9.json"
+JSON_PATH = "BENCH_PR10.json"
 
 
 def main() -> int:
     args = sys.argv[1:]
     write_json = "--json" in args
+    dryrun_dir = None
+    for i, a in enumerate(list(args)):
+        if a.startswith("--dryrun-dir="):
+            dryrun_dir = a.split("=", 1)[1]
+            args.remove(a)
+        elif a == "--dryrun-dir" and i + 1 < len(args):
+            dryrun_dir = args[i + 1]
+            args.remove(dryrun_dir)
+            args.remove(a)
     filters = [a.lower() for a in args if not a.startswith("--")]
     failures = []
     results: list[dict] = []
@@ -60,7 +73,10 @@ def main() -> int:
             entry = {"suite": key, "anchor": anchor, "status": "ok"}
             try:
                 mod = __import__(module, fromlist=["main"])
-                data = mod.main()
+                # the roofline suite reads dry-run artifacts — thread the
+                # directory through instead of leaking run.py's own argv
+                data = (mod.main(dryrun_dir) if key == "roofline"
+                        else mod.main())
                 if isinstance(data, dict):
                     entry["data"] = data
             except Exception:

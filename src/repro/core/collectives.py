@@ -17,6 +17,16 @@ Two layers:
    reduction (within-legion, then cross-legion) that maps onto intra-pod ICI
    + cross-pod DCI on real hardware.
 
+The runtime schedules sit on a **data-plane seam**
+(:mod:`repro.dist.dataplane`): the schedule walk — who reduces to whom,
+the stage list, the alpha-beta charge — is backend-independent control
+plane; the actual payload motion (the fold behind a reduce stage, the
+broadcast payload hop, the compression round-trip) delegates to the
+injected :class:`~repro.dist.dataplane.DataPlane`. The default sim plane
+reproduces the pre-seam numpy behavior bit-for-bit; the jax plane moves the
+same bytes through device collectives. Stage lists and timing are
+identical on both by construction.
+
 Alpha-beta model: a collective over x participants moving m bytes per rank
 costs ``ceil(log2 x) * (alpha + m / beta)`` (binomial tree). Intra-legion
 hops ride fast links; the cross-legion (global_comm) hop rides slow links —
@@ -103,34 +113,39 @@ class HierarchicalCollectives:
     survive across steps — dead masters' residuals are simply abandoned,
     which is safe (their contribution was already incorporated or lost with
     the node, exactly like its batch shard).
+
+    ``dataplane`` selects what moves the payload bytes (see module
+    docstring); the default sim plane keeps every schedule numpy-only —
+    no jax dispatch ever enters the hot simulator loop.
     """
 
     def __init__(self, topo: LegionTopology, link: LinkModel | None = None,
                  *, compression: str = "none", topk_fraction: float = 0.05,
-                 residuals: dict | None = None):
+                 residuals: dict | None = None, dataplane=None):
+        from repro.dist.dataplane import default_dataplane
         self.topo = topo
         self.link = link or LinkModel()
         self.compression = compression
         self.topk_fraction = topk_fraction
         self.residuals = residuals if residuals is not None else {}
+        self.dataplane = dataplane if dataplane is not None else default_dataplane()
 
     def _compress_cross(self, master: int, partial: np.ndarray
                         ) -> tuple[np.ndarray, int]:
         """Error-feedback compress one master's partial for the slow hop.
-        Returns (decompressed-at-receiver value, wire bytes)."""
+        Returns (decompressed-at-receiver value, wire bytes). The round-trip
+        itself runs on the data plane (numpy twins on sim, Pallas/lax
+        kernels on jax — byte-identical either way); the residual update and
+        the wire-byte accounting stay here in the control plane, so both
+        backends account the hop identically."""
         from repro.optim import compression as C
-        gf = partial.astype(np.float32) + self.residuals.get(master, 0.0)
-        if self.compression == "int8":
-            payload = C.compress_int8(jnp_asarray(gf))
-            back = np.asarray(C.decompress_int8(payload))
-        elif self.compression == "topk":
-            payload = C.compress_topk(jnp_asarray(gf), self.topk_fraction)
-            back = np.asarray(C.decompress_topk(payload, gf.shape))
-        else:
+        if self.compression not in ("int8", "topk"):
             return partial, partial.nbytes
+        gf = partial.astype(np.float32) + self.residuals.get(master, 0.0)
+        back = self.dataplane.compress(gf, self.compression,
+                                       self.topk_fraction)
         self.residuals[master] = gf - back
-        nbytes = C.compressed_bytes(jnp_asarray(gf), self.compression,
-                                    self.topk_fraction)
+        nbytes = C.compressed_bytes(gf, self.compression, self.topk_fraction)
         return back, nbytes
 
     # -- helpers ---------------------------------------------------------------
@@ -152,6 +167,9 @@ class HierarchicalCollectives:
 
     def bcast(self, root: int, payload: np.ndarray) -> CollectiveResult:
         topo = self.topo
+        # one data-plane hop moves the root's payload (device round-trip on
+        # jax, identity on sim); the schedule below fans the result out
+        payload = self.dataplane.bcast_payload(payload)
         nbytes = payload.nbytes
         stages: list[tuple[str, int, float]] = []
         data = {root: payload}
@@ -215,7 +233,7 @@ class HierarchicalCollectives:
         if topo.n_legions == 1:
             lg = topo.legions[0]
             t = self._stage(stages, "world", len(lg), nbytes, cross=False)
-            total = _tree_reduce(
+            total = self.dataplane.reduce(
                 [contributions[n] for n in lg.members if n in contributions], op)
             return CollectiveResult("reduce", t, {root: total}, stages)
         # 1. each local_comm reduces to its master — in parallel
@@ -233,7 +251,7 @@ class HierarchicalCollectives:
             t = self._lstage(stages, f"local_{lg.index}", len(lg), nbytes,
                              level=0)
             t_par = max(t_par, t)
-            partials[lg.master] = _tree_reduce(parts, op)
+            partials[lg.master] = self.dataplane.reduce(parts, op)
         t_total += t_par
         if not partials:
             # every contributor has left the topology (e.g. the whole
@@ -259,10 +277,10 @@ class HierarchicalCollectives:
                 if level == 1 and self.compression != "none" and op in (np.add,):
                     sent = [self._compress_cross(m, partials[m])
                             for m in contributing]
-                    reduced = _tree_reduce([s[0] for s in sent], op)
+                    reduced = self.dataplane.reduce([s[0] for s in sent], op)
                     gbytes = max(s[1] for s in sent)
                 else:
-                    reduced = _tree_reduce(
+                    reduced = self.dataplane.reduce(
                         [partials[m] for m in contributing], op)
                 t = self._lstage(stages, topo.comm_name(level, g.index),
                                  len(contributing), gbytes, level=level)
@@ -325,6 +343,8 @@ def jnp_asarray(x: np.ndarray):
 
 
 def _tree_reduce(parts: list[np.ndarray], op) -> np.ndarray:
+    """Sequential fold — the sim data plane's reduction (kept as a module
+    helper for direct callers; the schedules go through the seam)."""
     acc = parts[0]
     for p in parts[1:]:
         acc = op(acc, p)

@@ -140,6 +140,12 @@ class VirtualCluster:
         self._step = 0
         # error-feedback residuals for compressed cross-legion reduction
         self.compress_residuals: dict[int, Any] = {}
+        # data plane: what moves the bytes behind the scheduled collectives
+        # (policy.data_plane — sim | jax | auto); lazy import keeps the
+        # module graph acyclic (dist.dataplane never imports repro.core)
+        from repro.dist.dataplane import make_dataplane
+        self.dataplane = make_dataplane(self.policy)
+        self.reshards: list[Any] = []   # ReshardReport log (jax plane)
 
     @property
     def spares(self) -> list[int]:
@@ -204,7 +210,8 @@ class VirtualCluster:
             view if view is not None else self.topo, self.link,
             compression=self.policy.grad_compression,
             topk_fraction=self.policy.topk_fraction,
-            residuals=self.compress_residuals)
+            residuals=self.compress_residuals,
+            dataplane=self.dataplane)
 
     @property
     def live_nodes(self) -> list[int]:
@@ -253,6 +260,7 @@ class VirtualCluster:
             raise
         self._stamp_scope(report, scope)
         self._commit_repair(verdict, report)
+        self._reshard_after_repair()
         return report
 
     def repair_scoped(self, scopes: "list[RepairScope]"
@@ -310,6 +318,8 @@ class VirtualCluster:
         if worst:
             self.clock.charge(worst)
             self._refresh_liveness()
+        if out:
+            self._reshard_after_repair()
         return out
 
     # -- background (overlapped) repair ---------------------------------------
@@ -395,6 +405,31 @@ class VirtualCluster:
             self._refresh_liveness()
         self.repairs.append(report)
 
+    # -- data-plane state redistribution --------------------------------------
+
+    def register_sharded_state(self, name: str, getter: Callable[[], Any],
+                               setter: Callable[[Any], None] | None = None
+                               ) -> None:
+        """Register a live-state pytree (via getter/setter) for post-repair
+        redistribution on the data plane. On the jax plane every repair that
+        changes membership triggers a mesh rebuild + one measured device_put
+        pass over each registered tree (charged to the clock from wall
+        time); on the sim plane this is bookkeeping only. Consumers call
+        this — never the data plane directly — so backend selection stays
+        behind LegioPolicy/Session."""
+        self.dataplane.register_state(name, getter, setter)
+
+    def _reshard_after_repair(self) -> None:
+        """Redistribute registered state onto the survivors' mesh — the
+        "Shrink or Substitute" observation operationalized: the real cost
+        of in-situ recovery is data motion, so it is measured (wall time of
+        the device_put pass), not modeled by the alpha-beta formula."""
+        report = self.dataplane.reshard_registered(self.topo.view())
+        if report is not None:
+            self.reshards.append(report)
+            self.clock.charge(report.wall_seconds)
+            self._refresh_liveness()
+
     def _refresh_liveness(self) -> None:
         """Re-stamp every survivor's heartbeat after a repair charge. The
         repair is collective among the survivors (ULFM: everyone enters
@@ -446,6 +481,9 @@ class VirtualCluster:
             self.clock.charge(report.model_cost)
             self.repairs.append(report)
             reports.append(report)
+        # the splices changed membership: the data-plane mesh regrows and
+        # registered state spreads back over the rejoined devices
+        self._reshard_after_repair()
         return reports
 
     # -- elastic spare re-spawn (provisioner stage) ---------------------------

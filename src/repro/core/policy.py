@@ -161,6 +161,15 @@ class LegioPolicy:
     chaos_flap_delay_steps: int = 2      # steps between repair-out and return
     chaos_cascade_victims: int = 2       # secondary stragglers per cascade
     chaos_cascade_slowdown: float = 4.0  # latency multiplier on secondaries
+    # --- data plane (repro.dist.dataplane): what actually moves the bytes
+    # behind the scheduled collectives. "sim" keeps the numpy alpha-beta
+    # simulator (the CI path — schedules and accounting bit-for-bit as
+    # before); "jax" backs the data motion with real device collectives
+    # (psum/ppermute under shard_map over a make_mesh device mesh) and runs
+    # the compression hop on-device; "auto" picks jax when more than one
+    # device is visible, sim otherwise. The control plane (schedules, stage
+    # lists, alpha-beta clock charges) is backend-independent.
+    data_plane: str = "sim"              # sim | jax | auto
 
     def __post_init__(self) -> None:
         if self.hierarchy_depth < 0:
@@ -201,6 +210,10 @@ class LegioPolicy:
             raise ValueError("chaos_cascade_victims must be >= 0")
         if self.chaos_cascade_slowdown <= 0:
             raise ValueError("chaos_cascade_slowdown must be positive")
+        if self.data_plane not in ("sim", "jax", "auto"):
+            raise ValueError(
+                "data_plane must be one of ('sim', 'jax', 'auto'), "
+                f"got {self.data_plane!r}")
 
     def choose_k(self, s: int) -> int:
         if self.legion_size > 0:

@@ -121,6 +121,18 @@ class ResilientTrainer:
         self.opt = adamw_init(self.params)
         self.step = 0
         self.history: list[TrainerReport] = []
+        # live state rides the data plane's mesh: after every shrink or
+        # regrow the surviving devices re-place params/opt in one measured
+        # device_put pass (a no-op on the sim plane)
+        self.session.register_sharded_state(
+            "trainer.params", lambda: self.params,
+            lambda p: setattr(self, "params", p))
+        self.session.register_sharded_state(
+            "trainer.opt.mu", lambda: self.opt.mu,
+            lambda mu: setattr(self, "opt", self.opt._replace(mu=mu)))
+        self.session.register_sharded_state(
+            "trainer.opt.nu", lambda: self.opt.nu,
+            lambda nu: setattr(self, "opt", self.opt._replace(nu=nu)))
 
     # -- batch assembly under the current plan --------------------------------------
 

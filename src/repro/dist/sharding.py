@@ -20,6 +20,7 @@ need exact divisibility (constraints would pad).
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -55,15 +56,40 @@ def _axis_product(mesh, entry) -> int:
 # spec construction
 # ---------------------------------------------------------------------------
 
-def sanitize_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+# (param, dim, mesh axes) triples already warned about — replication is
+# silent after the first occurrence so sweeps over many layers of the same
+# shape do not flood the log
+_replication_warned: set[tuple] = set()
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh,
+                  *, param: str | None = None) -> P:
     """Drop spec axes whose dim is not divisible by the mesh axes' product
-    (jit argument shardings need exact divisibility); trim trailing Nones."""
+    (jit argument shardings need exact divisibility); trim trailing Nones.
+
+    Each dropped axis is reported once per (param, dim, axes) via
+    ``warnings.warn`` — a silently replicated weight is a real capacity/
+    throughput surprise and should be visible the first time it happens.
+    """
     out: list = []
     for i, entry in enumerate(spec):
         if entry is None or i >= len(shape):
             out.append(None)
             continue
-        out.append(entry if shape[i] % _axis_product(mesh, entry) == 0 else None)
+        prod = _axis_product(mesh, entry)
+        if shape[i] % prod == 0:
+            out.append(entry)
+        else:
+            key = (param, i, entry)
+            if key not in _replication_warned:
+                _replication_warned.add(key)
+                warnings.warn(
+                    f"sanitize_spec: dim {i} of {param or 'array'} "
+                    f"(size {shape[i]}) does not divide mesh axes "
+                    f"{entry!r} (product {prod}); replicating that "
+                    f"dimension instead of sharding it",
+                    UserWarning, stacklevel=2)
+            out.append(None)
     while out and out[-1] is None:
         out.pop()
     return P(*out)
@@ -111,7 +137,8 @@ def param_specs(cfg, params: PyTree, mesh) -> PyTree:
 
     def leaf_spec(path, leaf):
         spec = P(*_param_rule(_key_name(path[-1]), len(leaf.shape)))
-        return sanitize_spec(spec, leaf.shape, mesh)
+        name = ".".join(_key_name(e) for e in path)
+        return sanitize_spec(spec, leaf.shape, mesh, param=name)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
 
@@ -145,7 +172,8 @@ def cache_specs(cfg, mesh, cache: PyTree, global_batch: int) -> PyTree:
             spec = P(None, b, None, "model", None)
         else:
             spec = P(None, b, *((None,) * (nd - 2)))
-        return sanitize_spec(spec, leaf.shape, mesh)
+        name = ".".join(_key_name(e) for e in path)
+        return sanitize_spec(spec, leaf.shape, mesh, param=name)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, cache)
 

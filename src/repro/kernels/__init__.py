@@ -7,6 +7,8 @@ as <name>.py (pl.pallas_call + BlockSpec), with ``ops.py`` as the jit'd
 public wrapper and ``ref.py`` as the pure-jnp oracle used by the tests.
 """
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import quantize_int8_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention_pallas", "ssd_scan_pallas"]
+__all__ = ["flash_attention_pallas", "quantize_int8_pallas",
+           "ssd_scan_pallas"]

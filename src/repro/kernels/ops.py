@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import quantize_int8_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -39,3 +40,9 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, initial_state=None):
     return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
                            initial_state=initial_state,
                            interpret=_interpret())
+
+
+@jax.jit
+def quantize_int8(g):
+    """Int8 absmax quantization (the compression hop); returns Int8Grad."""
+    return quantize_int8_pallas(g, interpret=_interpret())

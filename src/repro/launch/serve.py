@@ -138,6 +138,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--admission", choices=("none", "shed", "park"),
                     default="none",
                     help="SLO-feasibility admission control at submit")
+    ap.add_argument("--data-plane", choices=["sim", "jax", "auto"],
+                    default="sim",
+                    help="what moves collective payloads: the numpy "
+                         "simulator, real jax device collectives, or auto "
+                         "(jax when >1 device is visible)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -149,7 +154,8 @@ def main(argv: list[str] | None = None) -> int:
     # explicit microbatch override); the policy only carries recovery setup
     policy = LegioPolicy(**recovery_preset(args.recovery),
                          serve_slo_seconds=args.slo,
-                         serve_admission=args.admission)
+                         serve_admission=args.admission,
+                         data_plane=args.data_plane)
     session = Session(
         args.nodes, policy=policy, injector=FaultInjector.at(pairs))
     server = ResilientServer(

@@ -68,6 +68,11 @@ def main(argv: list[str] | None = None) -> int:
                          "restores)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--data-plane", choices=["sim", "jax", "auto"],
+                    default="sim",
+                    help="what moves collective payloads: the numpy "
+                         "simulator, real jax device collectives, or auto "
+                         "(jax when >1 device is visible)")
     ap.add_argument("--json", action="store_true", help="JSON report to stdout")
     args = ap.parse_args(argv)
 
@@ -91,6 +96,7 @@ def main(argv: list[str] | None = None) -> int:
         recovery_mode=args.recovery,
         spare_fraction=args.spare_fraction,
         peer_replication=not args.no_peer_replication,
+        data_plane=args.data_plane,
     )
     cluster = VirtualCluster(
         args.nodes, policy=policy, injector=parse_failures(args.fail))

@@ -349,7 +349,16 @@ class Comm:
         self._call()
         self._resolve("gather", among=among)
         alive = set(self.session.cluster.topo.nodes)
-        return {n: v for n, v in (contributions or {}).items() if n in alive}
+        out = {n: v for n, v in (contributions or {}).items() if n in alive}
+        vals = list(out.values())
+        if (len(vals) > 1 and all(isinstance(v, np.ndarray) for v in vals)
+                and len({(v.shape, str(v.dtype)) for v in vals}) == 1):
+            # uniform ndarray payloads ride the data plane (all_gather on
+            # the jax backend; identity on sim) — mixed/object payloads
+            # stay host-side
+            gathered = self.session.cluster.dataplane.gather_arrays(vals)
+            out = dict(zip(out.keys(), gathered))
+        return out
 
     def _sync_if_busy(self, root: int) -> None:
         """A rooted op whose root sits inside a repairing scope cannot

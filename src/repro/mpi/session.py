@@ -204,6 +204,26 @@ class Session:
         self._actions.clear()
         return step
 
+    # -- data plane ------------------------------------------------------------
+
+    @property
+    def data_plane(self) -> str:
+        """Which backend moves collective payloads ("sim" | "jax") — set
+        via ``LegioPolicy.data_plane``, resolved by the cluster."""
+        return self.cluster.dataplane.name
+
+    def register_sharded_state(self, name: str,
+                               getter: Callable[[], object],
+                               setter: Callable[[object], None] | None = None
+                               ) -> None:
+        """Register live state (a pytree getter/setter pair) for
+        post-repair redistribution: after every topology shrink or regrow
+        the jax data plane rebuilds its mesh and re-places the tree through
+        ``param_specs`` in one measured ``device_put`` pass (a no-op on the
+        sim plane). Facade passthrough to the cluster — applications never
+        touch the data plane directly."""
+        self.cluster.register_sharded_state(name, getter, setter)
+
     # -- fault plumbing shared by every comm ------------------------------------
 
     def heartbeat(self) -> None:

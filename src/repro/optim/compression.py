@@ -20,6 +20,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -58,7 +59,40 @@ def decompress_topk(c: TopKGrad, shape, dtype=jnp.float32) -> jax.Array:
     return out.reshape(shape).astype(dtype)
 
 
-def compressed_bytes(g: jax.Array, scheme: str, fraction: float = 0.05) -> int:
+# ---------------------------------------------------------------------------
+# numpy twins — the sim data plane's compressors. Bitwise-identical to the
+# jax pair above for float32 inputs: absmax/clip/round (half-to-even) and the
+# q*scale product are elementwise IEEE f32 ops, and the stable descending
+# argsort matches lax.top_k's lowest-index-first tie-breaking. The parity is
+# a tested invariant (tests/test_dataplane.py), not an accident — it is what
+# lets the two data planes produce byte-identical collective results.
+# ---------------------------------------------------------------------------
+
+def compress_int8_np(g: np.ndarray) -> Int8Grad:
+    gf = np.asarray(g, dtype=np.float32)
+    scale = np.maximum(np.max(np.abs(gf)), np.float32(1e-12)) / np.float32(127.0)
+    q = np.clip(np.round(gf / scale), -127, 127).astype(np.int8)
+    return Int8Grad(q=q, scale=np.float32(scale))
+
+
+def decompress_int8_np(c: Int8Grad, dtype=np.float32) -> np.ndarray:
+    return (np.asarray(c.q, np.float32) * np.float32(c.scale)).astype(dtype)
+
+
+def compress_topk_np(g: np.ndarray, fraction: float) -> TopKGrad:
+    flat = np.asarray(g, dtype=np.float32).reshape(-1)
+    k = max(1, int(flat.size * fraction))
+    idx = np.argsort(-np.abs(flat), kind="stable")[:k].astype(np.int32)
+    return TopKGrad(values=flat[idx], indices=idx, size=flat.size)
+
+
+def decompress_topk_np(c: TopKGrad, shape, dtype=np.float32) -> np.ndarray:
+    out = np.zeros((c.size,), np.float32)
+    out[np.asarray(c.indices)] = np.asarray(c.values, np.float32)
+    return out.reshape(shape).astype(dtype)
+
+
+def compressed_bytes(g, scheme: str, fraction: float = 0.05) -> int:
     """Wire bytes after compression (used by the collective roofline model)."""
     n = g.size
     if scheme == "int8":

@@ -151,3 +151,66 @@ def test_ops_wrappers_jit(key):
     out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
     ref = flash_attention_ref(q, k, v)
     np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 absmax quantization (the compression hop, kernels/quantize.py)
+# ---------------------------------------------------------------------------
+
+QUANT_SHAPES = [(4,), (130,), (1000,), (64, 257), (3, 5, 7)]
+
+
+@pytest.mark.parametrize("shape", QUANT_SHAPES, ids=str)
+def test_quantize_kernel_matches_numpy_twin_bitwise(shape):
+    """The pinned data-plane invariant: device absmax + HOST-computed scale
+    + the quantize kernel == compress_int8_np, bit for bit (the scale is
+    runtime data precisely so XLA's divide-by-127 rewrite cannot split the
+    backends — see the kernels/quantize.py docstring)."""
+    from repro.kernels.quantize import absmax_pallas, quantize_int8_with_scale
+    from repro.optim.compression import compress_int8_np
+    g = np.random.default_rng(hash(shape) % 2**31).normal(
+        size=shape).astype(np.float32) * 3.0
+    am = np.float32(np.asarray(absmax_pallas(jnp.asarray(g), interpret=True)))
+    scale = np.float32(np.maximum(am, np.float32(1e-12)) / np.float32(127.0))
+    q = np.asarray(quantize_int8_with_scale(
+        jnp.asarray(g), jnp.float32(scale), interpret=True))
+    ref = compress_int8_np(g)
+    assert scale.tobytes() == ref.scale.tobytes()
+    assert q.tobytes() == ref.q.tobytes()
+    assert q.shape == shape and q.dtype == np.int8
+
+
+@pytest.mark.parametrize("shape", QUANT_SHAPES, ids=str)
+def test_quantize_pallas_composed_matches_jitted_reference(shape):
+    """The one-jit composition matches the jnp reference in the same jit
+    regime (like-for-like: both see XLA's constant-division rewrite)."""
+    from repro.kernels.quantize import quantize_int8_pallas
+    from repro.optim import compression as C
+    g = jnp.asarray(np.random.default_rng(3).normal(
+        size=shape).astype(np.float32))
+    got = quantize_int8_pallas(g, interpret=True)
+    ref = jax.jit(C.compress_int8)(g)
+    np.testing.assert_array_equal(np.asarray(got.q), np.asarray(ref.q))
+    assert float(got.scale) == float(ref.scale)
+
+
+def test_quantize_roundtrip_error_bound():
+    """Dequantized values sit within half a quantization step."""
+    from repro.kernels.quantize import quantize_int8_pallas
+    g = jnp.asarray(np.random.default_rng(5).normal(
+        size=(513,)).astype(np.float32))
+    c = quantize_int8_pallas(g, interpret=True)
+    back = np.asarray(c.q, np.float32) * np.float32(c.scale)
+    assert np.max(np.abs(back - np.asarray(g))) <= float(c.scale) * 0.5 + 1e-7
+
+
+def test_quantize_edge_cases():
+    from repro.kernels.quantize import quantize_int8_pallas
+    # all-zero input: epsilon floor keeps the scale finite, q all zero
+    z = quantize_int8_pallas(jnp.zeros((32,), jnp.float32), interpret=True)
+    assert not np.any(np.asarray(z.q))
+    assert np.isfinite(float(z.scale)) and float(z.scale) > 0
+    # single element; value maps to exactly +/-127
+    one = quantize_int8_pallas(jnp.asarray([-2.5], jnp.float32),
+                               interpret=True)
+    assert np.asarray(one.q).tolist() == [-127]

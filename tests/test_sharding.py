@@ -65,6 +65,45 @@ def test_sanitize_spec_drops_nondivisible():
     assert s5 == P()
 
 
+def test_sanitize_spec_warns_once_per_replicated_dim():
+    """Silently replicating a non-dividing dimension is a real capacity
+    surprise: the first drop warns (naming param, dim and mesh axes); the
+    same (param, dim, axes) never warns again."""
+    import warnings
+    from repro.dist import sharding
+    from repro.dist.sharding import sanitize_spec
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    sharding._replication_warned.clear()
+    with pytest.warns(UserWarning, match=r"dim 0 of blk\.wq.*'data'"):
+        s = sanitize_spec(P("data", "model"), (7, 6), mesh, param="blk.wq")
+    assert s == P(None, "model")
+    # one-shot: an identical drop is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sanitize_spec(P("data", "model"), (7, 6), mesh, param="blk.wq")
+    # a different param still warns
+    with pytest.warns(UserWarning, match="blk.wk"):
+        sanitize_spec(P("data", "model"), (7, 6), mesh, param="blk.wk")
+    # the anonymous path (in-model constraints) names "array"
+    sharding._replication_warned.clear()
+    with pytest.warns(UserWarning, match="array"):
+        sanitize_spec(P("data"), (9,), mesh)
+    sharding._replication_warned.clear()
+
+
+def test_param_specs_warning_names_the_leaf():
+    """The warning carries the dotted tree path of the offending leaf."""
+    import warnings
+    from repro.dist import sharding
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    params = {"layers": {"attn": {"wq": jnp.zeros((7, 6))}}}
+    sharding._replication_warned.clear()
+    with pytest.warns(UserWarning, match=r"layers\.attn\.wq"):
+        specs = param_specs(None, params, mesh)
+    assert specs["layers"]["attn"]["wq"] == P(None, "model")
+    sharding._replication_warned.clear()
+
+
 def test_batch_axes_divisibility():
     # AbstractMesh carries shape/axis_names without needing 2 real devices
     mesh = abstract_mesh((2, 1), ("data", "model"))
